@@ -1,0 +1,83 @@
+"""Shared benchmark harness for the paper-figure reproductions.
+
+Scale notes: the paper simulates 128 servers / 8 ToR / 8 spine at 100 Gbps
+for multi-second traces in ns-3. On one CPU core we default to a 64-server
+half-scale Clos and O(10^5)-tick traces (~8 ms of network time, thousands of
+flows), which reproduces every qualitative claim; pass --full for the
+paper-scale topology. Every benchmark prints `name,metric,value` CSV rows so
+`python -m benchmarks.run` output is machine-checkable.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from dataclasses import dataclass
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.sim import engine, metrics, topology, workload  # noqa: E402
+from repro.sim.config import PRESETS, SimConfig  # noqa: E402
+from repro.sim.topology import ClosParams  # noqa: E402
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+CLOS = (ClosParams(n_servers=128, n_tor=8, n_spine=8)
+        if FULL else
+        ClosParams(n_servers=64, n_tor=8, n_spine=8,
+                   switch_buffer_pkts=8192))
+
+N_FLOWS = 4000 if FULL else 1500
+DRAIN = 20_000
+
+
+def run_proto(proto_name: str, flows, topo, *, clos=None, probe=-1,
+              proto=None, ticks=None):
+    clos = clos or CLOS
+    cfg = SimConfig(proto=proto or PRESETS[proto_name], clos=clos,
+                    probe_flow=probe)
+    t0 = time.time()
+    n_ticks = ticks or int(flows.horizon + DRAIN)
+    st, emits = engine.run(topo, flows, cfg, n_ticks=n_ticks)
+    wall = time.time() - t0
+    m = metrics.summarize(proto_name, st, emits, flows,
+                          n_links=topo.n_ports,
+                          occ_bin_ref=clos.switch_buffer_pkts,
+                          cap=cfg.proto.queue_cap)
+    return m, st, emits, wall
+
+
+def make_flows(load=0.6, incast_load=0.0, incast_degree=100,
+               incast_total_kb=20480, wl="fb_hadoop", seed=0, n=None,
+               long_lived=0, locality=0.0, clos=None):
+    clos = clos or CLOS
+    topo = topology.build(clos)
+    wp = workload.WorkloadParams(workload=wl, load=load,
+                                 incast_load=incast_load,
+                                 incast_degree=incast_degree,
+                                 incast_total_kb=incast_total_kb,
+                                 locality=locality, seed=seed)
+    flows = workload.generate(topo, wp, n or N_FLOWS,
+                              long_lived=long_lived,
+                              long_lived_pkts=1 << 24)
+    return topo, flows
+
+
+def emit(name: str, metric: str, value):
+    print(f"{name},{metric},{value}")
+
+
+def emit_fct_table(name: str, m: metrics.RunMetrics):
+    emit(name, "p99_slowdown", round(m.fct_slowdown_p99, 3))
+    emit(name, "p95_slowdown", round(m.fct_slowdown_p95, 3))
+    emit(name, "avg_slowdown", round(m.fct_slowdown_avg, 3))
+    emit(name, "buffer_p99_pkts", int(m.buffer_p99_pkts))
+    emit(name, "buffer_max_pkts", m.buffer_max_pkts)
+    emit(name, "pfc_pause_pct", round(100 * m.pfc_pause_frac, 4))
+    emit(name, "drops", m.drops)
+    emit(name, "collision_pct",
+         round(100 * m.collisions / max(m.allocs, 1), 3))
+    for k, v in m.by_size.items():
+        emit(name, f"p99_slowdown{k}", round(v["p99"], 3))

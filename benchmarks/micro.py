@@ -1,0 +1,91 @@
+"""Microbenchmarks: simulator throughput, kernel oracle timings, serving
+engine throughput, pipeline schedule efficiency."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, make_flows, run_proto
+
+
+def sim_throughput():
+    topo, flows = make_flows(load=0.6, n=400, seed=42)
+    m, st, emits, wall = run_proto("bfc", flows, topo,
+                                   ticks=int(flows.horizon + 8000))
+    ticks = int(flows.horizon + 8000)
+    emit("micro_sim", "us_per_tick", round(1e6 * wall / ticks, 1))
+    emit("micro_sim", "sim_seconds_per_wall_second",
+         round((ticks * 80e-9) / wall, 7))
+
+
+def kernel_latency():
+    """Oracle-path latencies on CPU (kernels target TPU; interpret mode is
+    a correctness tool, so we time the jnp reference ops)."""
+    from repro.kernels.flash_attention import ops as fa
+    q = jax.random.normal(jax.random.key(0), (2, 8, 512, 64))
+    k = jax.random.normal(jax.random.key(1), (2, 4, 512, 64))
+    v = jax.random.normal(jax.random.key(2), (2, 4, 512, 64))
+    f = lambda: fa.attend(q, k, v, causal=True, impl="ref").block_until_ready()
+    f()
+    t0 = time.time()
+    for _ in range(5):
+        f()
+    emit("micro_flash_ref", "us_per_call", round(1e6 * (time.time() - t0) / 5))
+
+    from repro.kernels.rwkv6 import ops as wkv
+    r = jax.random.normal(jax.random.key(3), (2, 256, 4, 64)) * 0.5
+    kk = jax.random.normal(jax.random.key(4), (2, 256, 4, 64)) * 0.5
+    vv = jax.random.normal(jax.random.key(5), (2, 256, 4, 64)) * 0.5
+    lw = -jnp.clip(jnp.exp(jax.random.normal(jax.random.key(6),
+                                             (2, 256, 4, 64))), 1e-3, 5.0)
+    u = jax.random.normal(jax.random.key(7), (4, 64)) * 0.3
+    h0 = jnp.zeros((2, 4, 64, 64))
+    g = lambda: jax.block_until_ready(wkv.wkv6(r, kk, vv, lw, u, h0,
+                                               impl="ref"))
+    g()
+    t0 = time.time()
+    for _ in range(3):
+        g()
+    emit("micro_wkv_ref", "us_per_call", round(1e6 * (time.time() - t0) / 3))
+
+
+def serving_throughput():
+    from repro import configs
+    from repro.models import model
+    from repro.runtime import serving
+    cfg = configs.reduced("phi3-mini-3.8b")
+    params, _ = model.init_model(jax.random.key(0), cfg)
+    srv = serving.BFCServer(cfg, params, n_slots=8, max_len=64)
+    reqs = [serving.Request(rid=i, client=i % 4, prompt=[1, 2, 3],
+                            max_new=8) for i in range(32)]
+    t0 = time.time()
+    pending = list(reqs)
+    done = []
+    while pending or srv.active or srv.pending:
+        pending = [r for r in pending if not srv.submit(r)]
+        done.extend(srv.tick())
+    wall = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    emit("micro_serving", "tokens_per_s", round(toks / wall, 1))
+    emit("micro_serving", "completed", len(done))
+    emit("micro_serving", "pauses", srv.stats.pauses_sent)
+
+
+def pipeline_efficiency():
+    from repro.runtime import pipeline
+    for m in (8, 32):
+        sch = pipeline.bfc_schedule(8, m)
+        emit(f"micro_pipeline_m{m}", "bubble_frac",
+             round(sch.bubble_fraction, 3))
+        sch_s = pipeline.bfc_schedule(8, m,
+                                      service_time=[1, 1, 1, 2, 1, 1, 1, 1])
+        emit(f"micro_pipeline_m{m}_straggler", "max_buffer",
+             int(sch_s.max_buffer.max()))
+        emit(f"micro_pipeline_m{m}_straggler", "threshold", sch_s.threshold)
+
+
+ALL = [sim_throughput, kernel_latency, serving_throughput,
+       pipeline_efficiency]

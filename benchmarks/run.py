@@ -1,0 +1,40 @@
+"""Benchmark runner: one function per paper table/figure + microbenches.
+Prints ``name,metric,value`` CSV. Set BENCH_FULL=1 for paper-scale topology;
+use --only substring to filter."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--skip-micro", action="store_true")
+    args = ap.parse_args()
+
+    from . import paper_figs, micro
+    benches = list(paper_figs.ALL) + ([] if args.skip_micro else
+                                      list(micro.ALL))
+    failures = 0
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        print(f"# === {fn.__name__} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {fn.__name__} done in {time.time()-t0:.0f}s",
+                  flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{fn.__name__},status,FAIL")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Fault tolerance + elastic rescale demo.
+
+Phase 1 trains with failures injected mid-run (the driver restarts from the
+newest atomic checkpoint). Phase 2 resumes the SAME checkpoint with a
+different global batch — the elastic down/up-scale path (checkpoints are
+layout-free; restore re-places arrays onto whatever mesh/batch is current).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.runtime import train  # noqa: E402
+
+
+def main():
+    cfg = configs.reduced("gemma3-1b")
+    d = tempfile.mkdtemp(prefix="repro_elastic_")
+    try:
+        print("phase 1: 40 steps at batch 8, failures at steps 18 and 30")
+        rep = train.run_with_restarts(
+            cfg, steps=40, batch_size=8, seq_len=32, ckpt_dir=d,
+            fail_at_steps=[18, 30], ckpt_every=10,
+            opt_cfg=adamw.AdamWConfig(lr=2e-3))
+        print(f"  -> completed {rep.steps_done} steps with "
+              f"{rep.restarts} restarts; loss "
+              f"{rep.losses[0]:.2f} -> {rep.losses[-1]:.2f}")
+
+        print("phase 2: elastic rescale — resume at batch 4 (half the "
+              "data-parallel width) for 20 more steps")
+        rep2 = train.fit(cfg, steps=60, batch_size=4, seq_len=32,
+                         ckpt_dir=d, ckpt_every=10,
+                         opt_cfg=adamw.AdamWConfig(lr=2e-3))
+        print(f"  -> resumed from step {60 - len(rep2.losses)} at new "
+              f"layout; loss continues {rep2.losses[0]:.2f} -> "
+              f"{rep2.losses[-1]:.2f} (no cold restart)")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""BFC flow control as a pipeline-parallel schedule.
+
+Shows the paper's control law generating pipeline schedules: with uniform
+stages it emits the classic tight pipeline; with a straggler stage the
+upstream throttles so activation buffers stay bounded at the BFC threshold
+(Fig. 20's bound, transplanted to microbatches) instead of growing with the
+number of in-flight microbatches.
+
+    PYTHONPATH=src python examples/pipeline_backpressure.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.runtime import pipeline  # noqa: E402
+
+
+def show(title, sch):
+    print(f"\n== {title} ==")
+    print(f"slots={sch.total_slots} bubble={sch.bubble_fraction:.1%} "
+          f"threshold={sch.threshold} stalls={sch.stalls} "
+          f"max_buffer/stage={sch.max_buffer.tolist()}")
+    glyphs = " 0123456789abcdefghijklmnopqrstuvwxyz"
+    for s in range(sch.n_stages):
+        row = "".join(glyphs[int(m) + 1] if m >= 0 else "." for m in
+                      sch.actions[:60, s])
+        print(f"  stage{s}: {row}")
+
+
+def main():
+    show("uniform stages (tight pipeline)", pipeline.bfc_schedule(4, 12))
+    show("stage 2 is a 3x straggler (BFC bounds buffers, throttles source)",
+         pipeline.bfc_schedule(4, 12, service_time=[1, 1, 3, 1]))
+
+    # numerical equivalence of the scheduled execution
+    sch = pipeline.bfc_schedule(3, 6, service_time=[1, 2, 1])
+    fns = [lambda x: jnp.sin(x) + 1, lambda x: x * 2 - 0.3, jnp.tanh]
+    mbs = [jnp.full((4,), float(i)) for i in range(6)]
+    ref = pipeline.run_sequential(fns, mbs)
+    got = pipeline.run_reference(fns, sch, mbs)
+    ok = all(bool(jnp.allclose(a, b)) for a, b in zip(ref, got))
+    print(f"\nscheduled execution == sequential execution: {ok}")
+
+
+if __name__ == "__main__":
+    main()

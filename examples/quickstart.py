@@ -1,0 +1,44 @@
+"""Quickstart: the paper's headline result in ~2 minutes on a laptop CPU.
+
+Runs BFC, HPCC, DCTCP and Ideal-FQ on a small Clos with incast cross-traffic
+and prints tail FCT slowdowns + buffer occupancy — Fig. 6 in miniature.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sim import engine, metrics, topology, workload
+from repro.sim.config import PRESETS, SimConfig
+from repro.sim.topology import ClosParams
+
+
+def main():
+    clos = ClosParams(n_servers=16, n_tor=2, n_spine=2,
+                      switch_buffer_pkts=2048)
+    topo = topology.build(clos)
+    wp = workload.WorkloadParams(workload="fb_hadoop", load=0.55,
+                                 incast_load=0.05, incast_degree=10,
+                                 incast_total_kb=2000, seed=1)
+    flows = workload.generate(topo, wp, n_flows=400)
+    print(f"{flows.n_flows} flows over {topo.n_switches} switches, "
+          f"{flows.horizon + 6000} ticks (1 tick = 80 ns)\n")
+    print(f"{'scheme':>10} {'p99 slowdown':>13} {'buffer p99':>11} "
+          f"{'PFC %':>7} {'drops':>6} {'queue collisions':>17}")
+    for name in ("bfc", "hpcc", "dctcp", "ideal_fq"):
+        cfg = SimConfig(proto=PRESETS[name], clos=clos)
+        st, emits = engine.run(topo, flows, cfg,
+                               n_ticks=int(flows.horizon + 6000))
+        m = metrics.summarize(name, st, emits, flows, n_links=topo.n_ports,
+                              occ_bin_ref=2048, cap=cfg.proto.queue_cap)
+        print(f"{name:>10} {m.fct_slowdown_p99:>13.2f} "
+              f"{m.buffer_p99_pkts:>10.0f}p {100*m.pfc_pause_frac:>6.2f}% "
+              f"{m.drops:>6} {m.collisions:>17}")
+    print("\nBFC tracks Ideal-FQ tail latency with bounded buffers and no "
+          "PFC — the paper's core claim.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serve a small LM with batched requests through the BFC admission
+controller: requests = flows, decode slots = physical queues, pause/resume
+to clients per the paper's control law.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 32 --slots 8
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models import model  # noqa: E402
+from repro.runtime import serving  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch)
+    params, _ = model.init_model(jax.random.key(0), cfg)
+    srv = serving.BFCServer(cfg, params, n_slots=args.slots, max_len=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [serving.Request(
+        rid=i, client=i % 4,
+        prompt=rng.integers(1, cfg.vocab, rng.integers(2, 8)).tolist(),
+        max_new=args.max_new) for i in range(args.requests)]
+
+    t0 = time.time()
+    pending, done = list(reqs), []
+    retries = 0
+    while pending or srv.active or srv.pending:
+        nxt = []
+        for r in pending:
+            if not srv.submit(r):
+                nxt.append(r)
+                retries += 1
+        pending = nxt
+        done.extend(srv.tick())
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    s = srv.stats
+    print(f"served {s.completed}/{args.requests} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks/dt:.0f} tok/s on 1 CPU core)")
+    print(f"BFC admission: pauses={s.pauses_sent} resumes={s.resumes_sent} "
+          f"client-retries={retries} peak_pending={s.peak_pending} "
+          f"avg_slot_occupancy={s.slot_occupancy_sum/max(s.ticks,1):.1f}"
+          f"/{args.slots}")
+    r0 = done[0]
+    print(f"sample: prompt={r0.prompt} -> out={r0.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end training driver: a ~100M-parameter dense LM on the synthetic
+corpus with the full production path — BFC-bounded data pipeline, AdamW with
+ZeRO-style state, gradient accumulation, async atomic checkpoints, restart
+on failure.
+
+    PYTHONPATH=src python examples/train_small_lm.py --preset 20m --steps 50
+    PYTHONPATH=src python examples/train_small_lm.py --preset 100m \
+        --steps 300            # a few hundred steps; CPU-slow but exact
+
+Resume simply by re-running with the same --ckpt dir.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.runtime import train  # noqa: E402
+from repro.runtime.steps import StepSettings  # noqa: E402
+
+PRESETS = {
+    "20m": ModelConfig(name="demo-20m", family="dense", n_layers=6,
+                       d_model=384, n_heads=6, n_kv_heads=2, d_ff=1536,
+                       vocab=8192, param_dtype=jnp.float32,
+                       compute_dtype=jnp.float32),
+    "100m": ModelConfig(name="demo-100m", family="dense", n_layers=12,
+                        d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+                        vocab=32064, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="20m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (restart demo)")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"batch {args.batch}x{args.seq}, accum {args.accum}")
+    t0 = time.time()
+    if args.fail_at is not None:
+        rep = train.run_with_restarts(
+            cfg, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+            ckpt_dir=args.ckpt, fail_at_steps=[args.fail_at],
+            opt_cfg=adamw.AdamWConfig(lr=args.lr),
+            settings=StepSettings(accum=args.accum))
+    else:
+        rep = train.fit(cfg, steps=args.steps, batch_size=args.batch,
+                        seq_len=args.seq, ckpt_dir=args.ckpt,
+                        opt_cfg=adamw.AdamWConfig(lr=args.lr),
+                        settings=StepSettings(accum=args.accum))
+    dt = time.time() - t0
+    n = max(len(rep.losses) // 10, 1)
+    print("loss trajectory:", [round(x, 3) for x in rep.losses[::n]])
+    print(f"{rep.steps_done} steps in {dt:.0f}s "
+          f"({dt/max(rep.steps_done,1):.2f}s/step), "
+          f"restarts={rep.restarts}, checkpoints={rep.checkpoints}, "
+          f"nan-skipped={rep.skipped_nonfinite}, "
+          f"stragglers={rep.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: Backpressure Flow Control (BFC) as a production-grade JAX framework.
+
+Layers:
+  repro.core     -- the BFC protocol (bloom pause frames, flow table, control law)
+  repro.sim      -- packet-level network simulator (the paper's evaluation)
+  repro.models   -- LM model zoo (10 assigned architectures)
+  repro.runtime  -- distribution, BFC-scheduled pipeline parallelism, serving
+  repro.data     -- data pipeline with BFC-bounded prefetch
+  repro.optim    -- optimizers, schedules, gradient compression
+  repro.checkpoint -- fault-tolerant sharded checkpointing
+  repro.kernels  -- Pallas TPU kernels (flash attention, RG-LRU, RWKV6, BFC step)
+  repro.configs  -- architecture configs + shapes
+  repro.launch   -- mesh / dry-run / roofline / train / serve entry points
+"""
+__version__ = "0.1.0"

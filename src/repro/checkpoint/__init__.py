@@ -1,0 +1,2 @@
+"""Fault-tolerant sharded checkpointing (atomic, async, elastic restore)."""
+from . import io, manager  # noqa: F401

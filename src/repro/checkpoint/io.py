@@ -1,0 +1,115 @@
+"""Sharded, atomic checkpoint I/O (no orbax offline — built on npz + json).
+
+Layout:   <dir>/step_000123/
+              manifest.json        {step, keys, shapes, dtypes, meta}
+              arrays.npz           flattened param/opt tree
+          <dir>/LATEST             -> "step_000123" (atomic rename commit)
+
+Writes go to `step_X.tmp/` first and are renamed into place, so a crash
+mid-save never corrupts the restore point (fault-tolerance requirement).
+On restore, arrays are re-placed onto the *current* mesh — a checkpoint
+written on N data shards restores onto M != N (elastic rescale).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, tree, meta: Optional[dict] = None):
+    """Atomic full-tree save. Returns the committed path."""
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "meta": meta or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                     # atomic commit
+    _write_latest(directory, name)
+    return final
+
+
+def _write_latest(directory: str, name: str):
+    tmp = os.path.join(directory, "LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(name)
+    os.rename(tmp, os.path.join(directory, "LATEST"))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(directory, name, "manifest.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(directory: str, tree_like, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, dict]:
+    """Restore into the structure of `tree_like`. If `shardings` is given,
+    arrays are device_put with those shardings (elastic re-mesh restore)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path_) for path_, _ in leaves_p]
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(keys))
+    out = []
+    for (key, like), shd_ in zip(zip(keys, [l for _, l in leaves_p]),
+                                 shard_leaves):
+        arr = data[key]
+        want = tuple(like.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {want}")
+        arr = arr.astype(like.dtype)
+        if shd_ is not None:
+            arr = jax.device_put(arr, shd_)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), out), manifest["meta"]
+
+
+def retain(directory: str, keep: int = 3):
+    """Delete all but the newest `keep` checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)

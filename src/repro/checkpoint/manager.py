@@ -1,0 +1,53 @@
+"""Async checkpoint manager: snapshot-to-host, save on a background thread,
+atomic commit, bounded retention. The train loop never blocks on disk unless
+a previous save is still in flight (single-writer discipline)."""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+
+from . import io
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree, meta: Optional[dict] = None):
+        self.wait()                       # one save in flight at a time
+        host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
+
+        def work():
+            try:
+                io.save(self.directory, step, host_tree, meta)
+                io.retain(self.directory, self.keep)
+            except BaseException as e:     # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save_sync(self, step: int, tree, meta: Optional[dict] = None):
+        self.wait()
+        io.save(self.directory, step,
+                jax.tree.map(lambda x: jax.device_get(x), tree), meta)
+        io.retain(self.directory, self.keep)
+
+    def latest_step(self):
+        return io.latest_step(self.directory)
+
+    def restore(self, tree_like, step=None, shardings=None):
+        return io.restore(self.directory, tree_like, step, shardings)

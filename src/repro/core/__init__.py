@@ -1,0 +1,3 @@
+"""BFC protocol core: Bloom-filter pause signalling, flow-table model and the
+backpressure control law shared by the simulator and the runtime."""
+from . import backpressure, bloom, flow_table, hashing  # noqa: F401

@@ -1,0 +1,57 @@
+"""Flow hash table model (§3.3.3).
+
+BFC keeps per-*active*-flow state (assigned queue, paused bit, packet count)
+in a hash table of ``n_buckets`` buckets x ``bucket_size`` entries. The
+simulator keeps the per-flow state itself in dense arrays (exact), and uses
+this module to model the *capacity* behaviour of the real table: bucket
+occupancy, overflow events (flow lands in the per-egress overflow queue) and
+memory footprint, so the paper's sensitivity study (Fig. 23) is reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .hashing import bucket_index
+
+
+@dataclass(frozen=True)
+class FlowTableParams:
+    n_buckets: int = 8192
+    bucket_size: int = 4
+    fid_bytes: int = 12      # 5-tuple
+    count_bytes: int = 2
+    queue_bytes: int = 1
+
+    @property
+    def entry_bytes(self) -> int:
+        # 12 B FID + 2 B count + 1 B queue + paused bit (paper: 15 B/entry)
+        return self.fid_bytes + self.count_bytes + self.queue_bytes
+
+    @property
+    def table_bytes(self) -> int:
+        return self.n_buckets * self.bucket_size * self.entry_bytes
+
+
+def empty_buckets(params: FlowTableParams, n_tables: int) -> jnp.ndarray:
+    """Occupancy counters: (n_tables, n_buckets) int32."""
+    return jnp.zeros((n_tables, params.n_buckets), jnp.int32)
+
+
+def buckets_of(fid: jnp.ndarray, params: FlowTableParams) -> jnp.ndarray:
+    return bucket_index(fid, params.n_buckets)
+
+
+def update(buckets: jnp.ndarray, table: jnp.ndarray, bucket: jnp.ndarray,
+           delta: jnp.ndarray, params: FlowTableParams = FlowTableParams()):
+    """Batched activation(+1)/deactivation(-1) of flows at tables.
+
+    Returns (new_buckets, overflow_events) where overflow counts the number of
+    +1 events that landed in an already-full bucket (flow would go to the
+    overflow queue in hardware).
+    """
+    prev = buckets[table, bucket]
+    overflow = jnp.sum(((delta > 0) & (prev >= params.bucket_size)).astype(jnp.int32))
+    new = buckets.at[table, bucket].add(delta)
+    return new, overflow

@@ -1,0 +1,2 @@
+"""Data pipeline: synthetic corpus + BFC-bounded prefetch."""
+from . import pipeline, tokens  # noqa: F401

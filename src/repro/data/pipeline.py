@@ -1,0 +1,96 @@
+"""Host-side data pipeline with BFC-style bounded prefetch.
+
+The producer thread is the "upstream switch", the prefetch queue is the
+egress queue, the training loop is the drain. Instead of an unbounded (or
+fixed high-watermark) buffer, the producer is paused/resumed with the BFC
+control law from `repro.core.backpressure`: the queue keeps just enough
+batches to cover one produce/consume round trip at the observed drain rate,
+so host memory stays bounded even when the producer is much faster than the
+step function (and the producer wakes early enough to never starve it).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+from ..core.backpressure import BackpressureParams, pause_threshold
+
+
+class BackpressureQueue:
+    """Bounded producer/consumer queue driven by the BFC pause threshold."""
+
+    def __init__(self, produce: Callable[[int], object], *,
+                 hrtt_s: float = 0.05, capacity: int = 64):
+        self._produce = produce
+        self._buf = collections.deque()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._capacity = capacity
+        self._stop = False
+        self._next = 0
+        self._drain_ema = 0.1  # consumed items/s estimate
+        self._last_get: Optional[float] = None
+        self.params = BackpressureParams(hrtt=hrtt_s, tau=hrtt_s / 2, mu=1.0)
+        self.pauses = 0
+        self.resumes = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    # ---- control law ---------------------------------------------------------
+    def _threshold(self) -> int:
+        # mu = drain rate (items/s); n_active = 1 stream
+        p = BackpressureParams(hrtt=self.params.hrtt, tau=self.params.tau,
+                               mu=max(self._drain_ema, 1e-3))
+        return min(int(pause_threshold(p, 1)), self._capacity)
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._stop and len(self._buf) >= self._threshold():
+                    self.pauses += 1
+                    self._cv.wait(timeout=self.params.tau)
+                if self._stop:
+                    return
+                seq = self._next
+                self._next += 1
+            item = self._produce(seq)
+            with self._cv:
+                self._buf.append(item)
+                self._cv.notify_all()
+
+    def get(self, timeout: float = 60.0):
+        t0 = time.monotonic()
+        with self._cv:
+            while not self._buf:
+                if not self._cv.wait(timeout=timeout):
+                    raise TimeoutError("data pipeline starved")
+            item = self._buf.popleft()
+            now = time.monotonic()
+            if self._last_get is not None and now > self._last_get:
+                inst = 1.0 / (now - self._last_get)
+                self._drain_ema = 0.9 * self._drain_ema + 0.1 * inst
+            self._last_get = now
+            self.resumes += 1
+            self._cv.notify_all()
+        return item
+
+    @property
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._buf)
+
+    def close(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5)
+
+
+def batches(corpus, batch_size: int, seq_len: int, *, start_step: int = 0,
+            hrtt_s: float = 0.02) -> "BackpressureQueue":
+    """Prefetching batch source, resumable from `start_step`."""
+    return BackpressureQueue(
+        lambda i: corpus.batch(start_step + i, batch_size, seq_len),
+        hrtt_s=hrtt_s)

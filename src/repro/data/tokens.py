@@ -1,0 +1,42 @@
+"""Synthetic token corpus: deterministic, seekable, learnable.
+
+A second-order hash-mixing process over the vocab gives non-trivial
+next-token structure (a model can reduce loss below uniform), while being
+reproducible from (seed, position) alone — which is what makes checkpoint
+resume and elastic-rescale tests exact: sample i is always the same bytes no
+matter which host generates it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SyntheticCorpus:
+    def __init__(self, vocab: int, seed: int = 0):
+        self.vocab = vocab
+        self.seed = seed
+
+    def sequence(self, index: int, length: int) -> np.ndarray:
+        """The `index`-th training sequence (stateless, O(length)).
+
+        First-order: next = (a * prev + 7) mod V with 10% noise, a shared
+        across the corpus — only V transitions to learn, so even a few
+        hundred tiny steps show clear loss reduction."""
+        rng = np.random.default_rng((self.seed * 1_000_003 + index)
+                                    & 0x7FFFFFFF)
+        v = self.vocab
+        a = (self.seed * 31 + 17) % v or 1       # corpus-wide transition
+        toks = np.empty(length + 1, np.int64)
+        toks[0] = rng.integers(0, v)
+        noise = rng.integers(0, v, length + 1)
+        noisy = rng.random(length + 1) < 0.1
+        for i in range(1, length + 1):
+            toks[i] = noise[i] if noisy[i] else (a * toks[i - 1] + 7) % v
+        return toks.astype(np.int32)
+
+    def batch(self, step: int, batch_size: int, seq_len: int):
+        """(tokens, labels) for global step `step`."""
+        idx0 = step * batch_size
+        seqs = np.stack([self.sequence(idx0 + i, seq_len)
+                         for i in range(batch_size)])
+        return seqs[:, :-1], seqs[:, 1:]

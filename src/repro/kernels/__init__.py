@@ -1,0 +1,2 @@
+"""Pallas TPU kernels, each with a pure-jnp oracle (ref.py) and a jitted
+dispatcher (ops.py): flash_attention, rglru, rwkv6, bfc_step."""

@@ -1,0 +1,82 @@
+"""BFC switch dataplane decision kernel (Pallas / TPU).
+
+The per-tick, per-egress-port hot loop of the BFC switch (paper §3.3.2):
+given queue occupancies and pause bits for a block of ports,
+
+  1. N_active  = #queues with data and not paused          (VPU reduction)
+  2. Th        = ceil(pause_window / N_active)             (threshold)
+  3. pause     = occupancy > Th                            (per queue)
+  4. DRR pick  = argmin over eligible queues of (q - ptr) mod Q
+
+This is the TPU-native reading of "per-packet line-rate state update":
+ports are batched into VMEM-resident blocks (block_p x Q int32 tiles, lanes =
+queues) and the whole decision vector for 100s of ports is computed in one
+grid step — the simulator's inner loop offloaded as a kernel. ref.py is the
+pure-jnp oracle (identical math used by repro.sim.engine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1 << 20
+
+
+def _kernel(occ_ref, qpaused_ref, ptr_ref, o_nact, o_th, o_pause, o_sel, *,
+            pause_window: int, nq: int):
+    occ = occ_ref[...]                          # (bp, Q) int32
+    qpaused = qpaused_ref[...]                  # (bp, Q) bool
+    ptr = ptr_ref[...]                          # (bp, 1) int32
+
+    active = (occ > 0) & jnp.logical_not(qpaused)
+    n_act = jnp.maximum(jnp.sum(active.astype(jnp.int32), axis=1,
+                                keepdims=True), 1)
+    th = (pause_window + n_act - 1) // n_act    # ceil, >= 1
+    o_nact[...] = n_act
+    o_th[...] = th
+    o_pause[...] = occ > th
+
+    q_ix = jax.lax.broadcasted_iota(jnp.int32, occ.shape, 1)
+    drr_key = (q_ix - ptr) % nq
+    packed = jnp.where(active, drr_key * nq + q_ix, BIG)
+    best = jnp.min(packed, axis=1, keepdims=True)
+    o_sel[...] = jnp.where(best < BIG, best % nq, -1)
+
+
+def bfc_decide(occ, qpaused, ptr, *, pause_window: int, block_p: int = 256,
+               interpret: bool = False):
+    """occ (P,Q) i32, qpaused (P,Q) bool, ptr (P,) i32 ->
+    (n_active (P,), th (P,), pause_mask (P,Q) bool, sel_q (P,) i32)."""
+    p, q = occ.shape
+    block_p = min(block_p, p)
+    assert p % block_p == 0
+    kern = functools.partial(_kernel, pause_window=pause_window, nq=q)
+    nact, th, pause, sel = pl.pallas_call(
+        kern,
+        grid=(p // block_p,),
+        in_specs=[
+            pl.BlockSpec((block_p, q), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, q), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, q), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((p, q), jnp.bool_),
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(occ, qpaused, ptr[:, None])
+    return nact[:, 0], th[:, 0], pause, sel[:, 0]

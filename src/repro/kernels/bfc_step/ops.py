@@ -1,0 +1,21 @@
+"""Jitted wrapper for the BFC switch decision kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .bfc_step import bfc_decide
+from .ref import bfc_decide_ref
+
+
+@functools.partial(jax.jit, static_argnames=("pause_window", "impl",
+                                             "block_p"))
+def decide(occ, qpaused, ptr, *, pause_window: int, impl: str = "auto",
+           block_p: int = 256):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return bfc_decide_ref(occ, qpaused, ptr, pause_window=pause_window)
+    return bfc_decide(occ, qpaused, ptr, pause_window=pause_window,
+                      block_p=block_p, interpret=(impl == "interpret"))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the BFC switch decision kernel — the same math
+`repro.sim.engine` uses inline each tick."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 1 << 20
+
+
+def bfc_decide_ref(occ, qpaused, ptr, *, pause_window: int):
+    p, q = occ.shape
+    active = (occ > 0) & ~qpaused
+    n_act = jnp.maximum(active.sum(axis=1), 1)
+    th = (pause_window + n_act - 1) // n_act
+    pause = occ > th[:, None]
+    q_ix = jnp.arange(q)[None, :]
+    drr_key = (q_ix - ptr[:, None]) % q
+    packed = jnp.where(active, drr_key * q + q_ix, BIG)
+    best = packed.min(axis=1)
+    sel = jnp.where(best < BIG, best % q, -1)
+    return n_act.astype(jnp.int32), th.astype(jnp.int32), pause, \
+        sel.astype(jnp.int32)

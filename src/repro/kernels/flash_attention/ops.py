@@ -1,0 +1,24 @@
+"""Jitted public wrapper: dispatches between the Pallas kernel (TPU), the
+interpret-mode kernel (CPU validation) and the jnp reference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def attend(q, k, v, *, causal: bool = True, window: int = 0,
+           impl: str = "auto", block_q: int = 128, block_k: int = 128):
+    """q (B,H,S,hd), k/v (B,K,T,hd). impl: auto|pallas|interpret|ref."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=(impl == "interpret"))

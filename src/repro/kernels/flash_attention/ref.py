@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,H,S,hd), k/v (B,K,T,hd) -> (B,H,S,hd). Naive materialized
+    softmax; the numerical ground truth for the Pallas kernel."""
+    b, h, s, hd = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, s, hd)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .rglru import rglru_scan
+from .ref import rglru_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "block_w"))
+def scan(log_a, b, h0, *, impl: str = "auto", chunk: int = 128,
+         block_w: int = 128):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return rglru_scan_ref(log_a, b, h0)
+    return rglru_scan(log_a, b, h0, chunk=chunk, block_w=block_w,
+                      interpret=(impl == "interpret"))

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: sequential linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a, b, h0):
+    """h_t = exp(log_a_t) h_{t-1} + b_t, sequentially over axis 1.
+
+    log_a, b: (B,S,W); h0: (B,W). Returns (h_all, h_last), both f32."""
+    def step(h, inp):
+        la, bb = inp
+        h = jnp.exp(la.astype(jnp.float32)) * h + bb.astype(jnp.float32)
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (log_a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), hT

@@ -1,0 +1,19 @@
+"""Jitted wrapper for the WKV6 kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .rwkv6 import wkv
+from .ref import wkv_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def wkv6(r, k, v, logw, u, h0, *, impl: str = "auto", chunk: int = 16):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return wkv_ref(r, k, v, logw, u, h0)
+    return wkv(r, k, v, logw, u, h0, chunk=chunk,
+               interpret=(impl == "interpret"))

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: strictly sequential WKV recurrence (token by token)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u, h0):
+    """r,k,v,logw: (B,S,H,D); u: (H,D); h0: (B,H,D,D) ->
+    (out (B,S,H,D) f32, hT)."""
+    def step(S, inp):
+        rt, kt, vt, lwt = inp                    # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,D,D)
+        out = jnp.einsum("bhd,bhde->bhe", rt,
+                         S + u[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, out
+
+    f32 = lambda x: x.astype(jnp.float32)
+    seq = lambda x: f32(x).swapaxes(0, 1)        # (S,B,H,D)
+    hT, outs = jax.lax.scan(step, f32(h0),
+                            (seq(r), seq(k), seq(v), seq(logw)))
+    return outs.swapaxes(0, 1), hT

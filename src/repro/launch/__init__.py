@@ -1,0 +1,2 @@
+"""Launch entry points: mesh construction, multi-pod dry-run, roofline
+analysis, train/serve drivers."""

@@ -1,0 +1,324 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import: jax locks the device
+# count on first initialization. 512 placeholder host devices let
+# jax.make_mesh build the production meshes; nothing is ever allocated on
+# them (all inputs are ShapeDtypeStructs).
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from .. import configs                    # noqa: E402
+from ..configs.shapes import SHAPES       # noqa: E402
+from ..models import model                # noqa: E402
+from ..optim import adamw                 # noqa: E402
+from ..runtime import sharding as shd     # noqa: E402
+from ..runtime import steps as steps_mod  # noqa: E402
+from . import mesh as mesh_mod            # noqa: E402
+from . import roofline                    # noqa: E402
+
+# per-(arch, shape) step settings so reported memory fits a 16 GB v5e chip
+ACCUM = {
+    ("deepseek-67b", "train_4k"): 16,
+    ("grok-1-314b", "train_4k"): 16,
+    ("starcoder2-15b", "train_4k"): 4,
+    ("phi3-mini-3.8b", "train_4k"): 2,
+    ("rwkv6-3b", "train_4k"): 2,
+    ("recurrentgemma-2b", "train_4k"): 2,
+    ("granite-moe-1b-a400m", "train_4k"): 4,
+}
+SCAN_GROUPS = {"deepseek-67b": 5, "grok-1-314b": 8, "starcoder2-15b": 5}
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    rules = shd.rules_for(cfg, mode=("decode" if SHAPES[shape_name].kind
+                                     == "decode" else "train"))
+    pshapes, paxes, pshard = steps_mod.param_shardings(cfg, mesh, rules)
+    bspecs = steps_mod.input_specs(cfg, shape)
+    bshard = steps_mod.specs_for_batch(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        st = steps_mod.StepSettings(
+            accum=ACCUM.get((arch, shape_name), 1),
+            scan_groups=SCAN_GROUPS.get(arch, 0))
+        oshapes = adamw.init_shapes(pshapes)
+        pspecs = jax.tree.map(lambda s: s.spec, pshard)
+        oshard = adamw.state_shardings(pspecs, pshapes, mesh)
+
+        def gc(tree):
+            return jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, jax.sharding.NamedSharding(
+                        mesh, adamw.zero_spec(s.spec, g.shape, mesh))),
+                tree, pshard)
+
+        fn = steps_mod.make_train_step(cfg, adamw.AdamWConfig(), st,
+                                       grad_constraint=gc)
+        jfn = jax.jit(fn,
+                      in_shardings=(pshard, oshard, bshard),
+                      donate_argnums=(0, 1))
+        args = (pshapes, oshapes, bspecs)
+    elif shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg)
+        extra = (bspecs.get("extra_embeds"),) if "extra_embeds" in bspecs \
+            else ()
+        eshard = (bshard.get("extra_embeds"),) if "extra_embeds" in bshard \
+            else ()
+        jfn = jax.jit(fn, in_shardings=(pshard, bshard["tokens"]) + eshard)
+        args = (pshapes, bspecs["tokens"]) + extra
+    else:  # decode
+        fn = steps_mod.make_decode_step(cfg)
+        jfn = jax.jit(
+            fn, in_shardings=(pshard, bshard["cache"], bshard["tokens"],
+                              bshard["kv_len"]),
+            donate_argnums=(1,))
+        args = (pshapes, bspecs["cache"], bspecs["tokens"], bspecs["kv_len"])
+    return cfg, shape, jfn, args, rules
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str):
+    t0 = time.time()
+    cfg, shape, jfn, args, rules = build_cell(arch, shape_name, mesh)
+    with shd.use_rules(rules, mesh):
+        with mesh:
+            lowered = jfn.lower(*args)
+            compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_bytes = getattr(mem, "temp_size_in_bytes", 0) + \
+            getattr(mem, "argument_size_in_bytes", 0) + \
+            getattr(mem, "output_size_in_bytes", 0) - \
+            getattr(mem, "alias_size_in_bytes", 0)
+    except Exception:
+        mem, mem_bytes = None, None
+    hlo = compiled.as_text()
+    chips = mesh.devices.size
+    # decode processes ONE new token per sequence; train/prefill all of them
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    # training does fwd+bwd: ~3x the 2N*D forward matmul flops -> 6N*D
+    mult = 6.0 if shape.kind == "train" else 2.0
+    n_active = cfg.active_param_count()
+    model_flops = mult * n_active * tokens
+    if shape.kind == "decode":
+        # decode also reads the KV cache: attention score+value flops per
+        # layer = 2 * 2 * H * hd * visible_len (window for local layers)
+        def vis(kind):
+            if kind == "attn":
+                return shape.seq_len
+            if kind == "local":
+                return min(cfg.window or shape.seq_len, shape.seq_len)
+            return 0
+        model_flops += (2.0 * 2 * cfg.n_heads * cfg.hd * shape.global_batch
+                        * sum(vis(cfg.block_kind(i))
+                              for i in range(cfg.n_layers)))
+    terms = roofline.analyze(arch, shape_name, mesh_name, chips, cost, hlo,
+                             model_flops, mem_bytes)
+    rec = terms.to_dict()
+    rec.update(compile_s=round(time.time() - t0, 1),
+               accum=ACCUM.get((arch, shape_name), 1),
+               n_params=cfg.param_count(), n_active=n_active,
+               collectives_count={
+                   k: hlo.count(f" {k}") for k in
+                   ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")})
+    return rec
+
+
+# ---- roofline probes -----------------------------------------------------------
+# XLA cost_analysis counts a while-loop body once regardless of trip count,
+# so the scan-based production steps undercount flops/bytes/collectives.
+# Probes recompile each cell with every scan UNROLLED on reduced unit counts
+# (1 vs 2 pattern units) and reduced sequence lengths, then
+# launch/report.py extrapolates:   cost(S, units) = fixed(S) + unit(S)*units,
+# with unit(S) = a*S + b*S^2 fit from the two probe sequence lengths (the
+# quadratic term is the global-attention part; linear-time blocks get b~0
+# automatically because probes run the *real* block implementations).
+PROBE_SEQ = {
+    "recurrentgemma-2b": (4096, 8192),   # past the 2048 sliding window
+    "rwkv6-3b": (512, 1024),             # linear-time, keep unroll small
+}
+PROBE_SEQ_DEFAULT = (1024, 2048)
+
+
+def probe_cell(arch: str, shape_name: str, mesh, mesh_name: str):
+    from ..models import flags as mflags
+    cfg0 = configs.get(arch)
+    shape = SHAPES[shape_name]
+    unit_len = len(cfg0.pattern)
+    recs = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": shape.kind, "unit_len": unit_len,
+            "n_units": cfg0.layer_plan[0],
+            "rem_len": len(cfg0.layer_plan[1]),
+            "accum": ACCUM.get((arch, shape_name), 1), "probes": {}}
+
+    def one(cfg, sh, units, tag):
+        rules = shd.rules_for(cfg, mode=("decode" if sh.kind == "decode"
+                                         else "train"))
+        pshapes, paxes, pshard = steps_mod.param_shardings(cfg, mesh, rules)
+        bspecs = steps_mod.input_specs(cfg, sh)
+        bshard = steps_mod.specs_for_batch(cfg, sh, mesh, rules)
+        with mflags.unrolled_scans():
+            if sh.kind == "train":
+                oshapes = adamw.init_shapes(pshapes)
+                pspecs = jax.tree.map(lambda s: s.spec, pshard)
+                oshard = adamw.state_shardings(pspecs, pshapes, mesh)
+
+                def gc(tree):
+                    return jax.tree.map(
+                        lambda g, s: jax.lax.with_sharding_constraint(
+                            g, jax.sharding.NamedSharding(
+                                mesh, adamw.zero_spec(s.spec, g.shape,
+                                                      mesh))),
+                        tree, pshard)
+                fn = steps_mod.make_train_step(
+                    cfg, adamw.AdamWConfig(),
+                    steps_mod.StepSettings(accum=1, probe=True, remat=True),
+                    grad_constraint=gc)
+                jfn = jax.jit(fn, in_shardings=(pshard, oshard, bshard),
+                              donate_argnums=(0, 1))
+                args = (pshapes, oshapes, bspecs)
+            elif sh.kind == "prefill":
+                fn = steps_mod.make_prefill_step(cfg, probe=True)
+                extra = ((bspecs["extra_embeds"],)
+                         if "extra_embeds" in bspecs else ())
+                esh = ((bshard["extra_embeds"],)
+                       if "extra_embeds" in bshard else ())
+                jfn = jax.jit(fn,
+                              in_shardings=(pshard, bshard["tokens"]) + esh)
+                args = (pshapes, bspecs["tokens"]) + extra
+            else:
+                fn = steps_mod.make_decode_step(cfg, probe=True)
+                jfn = jax.jit(fn, in_shardings=(
+                    pshard, bshard["cache"], bshard["tokens"],
+                    bshard["kv_len"]), donate_argnums=(1,))
+                args = (pshapes, bspecs["cache"], bspecs["tokens"],
+                        bspecs["kv_len"])
+            with shd.use_rules(rules, mesh):
+                with mesh:
+                    compiled = jfn.lower(*args).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = roofline.collective_bytes(compiled.as_text())
+        recs["probes"][tag] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll, "units": units, "seq": sh.seq_len,
+            "batch": sh.global_batch,
+        }
+
+    s1, s2 = PROBE_SEQ.get(arch, PROBE_SEQ_DEFAULT)
+    accum = ACCUM.get((arch, shape_name), 1)
+    if shape.kind == "decode":
+        # decode is linear in cache length by construction: probe the real
+        # cache length with 1 and 2 units
+        for u in (1, 2):
+            cfg = cfg0.with_(n_layers=unit_len * u)
+            one(cfg, shape, u, f"u{u}")
+    else:
+        mb = max(shape.global_batch // accum, 16)
+        for u in (1, 2):
+            for s in (s1, s2):
+                cfg = cfg0.with_(n_layers=unit_len * u)
+                sh = SHAPES[shape_name].__class__(
+                    name=shape.name, kind=shape.kind, seq_len=s,
+                    global_batch=mb)
+                one(cfg, sh, u, f"u{u}_s{s}")
+        if shape.kind == "train":
+            # optimizer-only probes (full model + 1-unit model)
+            for tag, cfg in (("opt_full", cfg0),
+                             ("opt_u1", cfg0.with_(n_layers=unit_len))):
+                rules = shd.rules_for(cfg)
+                pshapes, _, pshard = steps_mod.param_shardings(cfg, mesh,
+                                                               rules)
+                oshapes = adamw.init_shapes(pshapes)
+                pspecs = jax.tree.map(lambda s: s.spec, pshard)
+                oshard = adamw.state_shardings(pspecs, pshapes, mesh)
+                gshard = jax.tree.map(
+                    lambda s, p: jax.sharding.NamedSharding(
+                        mesh, adamw.zero_spec(s.spec, p.shape, mesh)),
+                    pshard, pshapes)
+                gshapes = jax.tree.map(
+                    lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                    pshapes)
+                fn = lambda o, g: adamw.apply(adamw.AdamWConfig(), o, g)
+                with mesh:
+                    compiled = jax.jit(
+                        fn, in_shardings=(oshard, gshard),
+                        donate_argnums=(0,)).lower(oshapes,
+                                                   gshapes).compile()
+                cost = compiled.cost_analysis() or {}
+                recs["probes"][tag] = {
+                    "flops": float(cost.get("flops", 0.0)),
+                    "bytes": float(cost.get("bytes accessed", 0.0)),
+                    "coll": roofline.collective_bytes(compiled.as_text()),
+                }
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--probe", action="store_true",
+                    help="run roofline probes instead of full cells")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCHS) if args.arch == "all" else [args.arch]
+    meshes = []
+    if args.mesh in ("pod1", "both"):
+        meshes.append(("pod1", mesh_mod.make_production_mesh()))
+    if args.mesh in ("pod2", "both"):
+        meshes.append(("pod2", mesh_mod.make_production_mesh(multi_pod=True)))
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    results = [r for r in results if r.get("status") == "ok"]
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    cells = configs.cells(archs)
+    if args.shape != "all":
+        cells = [c for c in cells if c[1] == args.shape]
+    for mesh_name, mesh in meshes:
+        for arch, shape_name in cells:
+            if (arch, shape_name, mesh_name) in done:
+                continue
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ...",
+                  flush=True)
+            try:
+                if args.probe:
+                    rec = probe_cell(arch, shape_name, mesh, mesh_name)
+                    rec["status"] = "ok"
+                    print(f"    probes: {sorted(rec['probes'])}", flush=True)
+                else:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name)
+                    rec["status"] = "ok"
+                    print("   ", roofline.format_row(
+                        roofline.RooflineTerms(**{
+                            k: rec[k] for k in roofline.RooflineTerms.
+                            __dataclass_fields__})), flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "status": f"FAIL: {type(e).__name__}: {e}"}
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"[dryrun] {n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

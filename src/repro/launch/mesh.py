@@ -1,0 +1,29 @@
+"""Production mesh definitions.
+
+`make_production_mesh` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+smoke tests and benchmarks see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for unit tests (requires the host-device env var)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# v5e hardware constants for the roofline analysis
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~ per-chip injection, 1 link)

@@ -1,0 +1,278 @@
+"""Roofline report builder: combines the full-compile dry-run records
+(memory per device; scan-based, so flop/byte counts are lower bounds) with
+the probe records (scan-free, exact, but at reduced unit counts / sequence
+lengths) into the corrected per-cell roofline table.
+
+Extrapolation model (see dryrun.probe_cell):
+    cost(units, S) = fixed(S) + units * unit(S)
+    unit(S)  = a*S + b*S^2        (b = global-attention share; ~0 for
+                                   linear-time blocks, measured not assumed)
+    fixed(S) = f0 + f1*S          (f0 ~ optimizer + per-step constants)
+    train:   total = accum * [fixed(S*) - opt_1unit + units_eff * unit(S*)]
+                     + opt_full
+    prefill: total = fixed(S*) + units_eff * unit(S*)
+    decode:  probes run at the real cache length; total = fixed +
+             units_eff * unit   (no S fit needed)
+
+The memory TERM for decode/prefill additionally uses an analytic
+traffic model (weights + cache read once per token) because XLA's
+HloCostAnalysis charges full-tensor bytes for in-place cache updates
+(dynamic-update-slice), wildly overstating serving traffic — see
+EXPERIMENTS.md §Roofline methodology.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .. import configs
+from ..configs.shapes import SHAPES
+from ..models import model as model_lib
+from ..runtime import sharding as shd
+from . import roofline
+from .mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+
+def _metric(rec: Dict, metric: str) -> float:
+    if metric == "coll":
+        return roofline.collective_traffic(rec["coll"])
+    return float(rec[metric])
+
+
+def _fit_quadratic(s1, s2, y1, y2) -> Tuple[float, float]:
+    """Solve y = a*s + b*s^2 through two points."""
+    m = np.array([[s1, s1 * s1], [s2, s2 * s2]], float)
+    a, b = np.linalg.solve(m, np.array([y1, y2], float))
+    return float(a), float(b)
+
+
+def _fit_affine(s1, s2, y1, y2) -> Tuple[float, float]:
+    f1 = (y2 - y1) / (s2 - s1)
+    f0 = y1 - f1 * s1
+    return float(f0), float(f1)
+
+
+def _fit_unit(s1, s2, y1, y2, quadratic: bool, target: int) -> float:
+    """unit(S): quadratic basis a*S + b*S^2 only for archs with *global*
+    attention in the pattern; linear-time stacks use the affine basis
+    c + a*S (a pure quadratic fit amplifies probe noise ~ (S*/s2)^2)."""
+    if quadratic:
+        a, b = _fit_quadratic(s1, s2, y1, y2)
+        return max(a * target + b * target ** 2, 0.0)
+    c, a = _fit_affine(s1, s2, y1, y2)
+    return max(c + a * target, 0.0)
+
+
+def extrapolate_train(probes: Dict, metric: str, *, target_seq: int,
+                      n_units: float, accum: int,
+                      probe_seqs: Tuple[int, int],
+                      quadratic: bool = True) -> float:
+    s1, s2 = probe_seqs
+    u = {}
+    f = {}
+    for s in (s1, s2):
+        c1 = _metric(probes[f"u1_s{s}"], metric)
+        c2 = _metric(probes[f"u2_s{s}"], metric)
+        u[s] = c2 - c1
+        f[s] = c1 - u[s]
+    unit_t = _fit_unit(s1, s2, u[s1], u[s2], quadratic, target_seq)
+    f0, f1 = _fit_affine(s1, s2, f[s1], f[s2])
+    fixed_t = max(f0 + f1 * target_seq, 0.0)
+    opt_full = _metric(probes["opt_full"], metric) if "opt_full" in probes \
+        else 0.0
+    opt_u1 = _metric(probes["opt_u1"], metric) if "opt_u1" in probes else 0.0
+    return accum * max(fixed_t - opt_u1 + n_units * unit_t, 0.0) + opt_full
+
+
+def extrapolate_prefill(probes: Dict, metric: str, *, target_seq: int,
+                        n_units: float, probe_seqs: Tuple[int, int],
+                        quadratic: bool = True) -> float:
+    s1, s2 = probe_seqs
+    u, f = {}, {}
+    for s in (s1, s2):
+        c1 = _metric(probes[f"u1_s{s}"], metric)
+        c2 = _metric(probes[f"u2_s{s}"], metric)
+        u[s] = c2 - c1
+        f[s] = c1 - u[s]
+    unit_t = _fit_unit(s1, s2, u[s1], u[s2], quadratic, target_seq)
+    f0, f1 = _fit_affine(s1, s2, f[s1], f[s2])
+    return max(f0 + f1 * target_seq, 0.0) + n_units * unit_t
+
+
+def extrapolate_decode(probes: Dict, metric: str, *, n_units: float) -> float:
+    c1 = _metric(probes["u1"], metric)
+    c2 = _metric(probes["u2"], metric)
+    unit = c2 - c1
+    fixed = c1 - unit
+    return max(fixed, 0.0) + n_units * max(unit, 0.0)
+
+
+# ---- analytic serving-traffic model ---------------------------------------------
+def _shard_factor(spec, mesh_shape: Dict[str, int]) -> int:
+    fac = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        for n in names:
+            fac *= mesh_shape.get(n, 1)
+    return fac
+
+
+def analytic_decode_bytes(arch: str, shape_name: str,
+                          mesh_shape: Dict[str, int]) -> float:
+    """Per-chip HBM traffic for one decode step: every resident weight byte
+    + the resident KV cache/state read once (weight- and cache-streaming)."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    rules = shd.rules_for(cfg, mode="decode")
+
+    class M:     # duck-typed mesh for Rules.spec divisibility checks
+        shape = mesh_shape
+    mesh = M()
+
+    shapes, axes = model_lib.model_shapes(cfg)
+    import jax
+    total = 0.0
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    for ax, sh in zip(jax.tree.leaves(axes, is_leaf=is_ax),
+                      jax.tree.leaves(shapes)):
+        spec = rules.spec(tuple(ax), sh.shape, mesh)
+        total += (np.prod(sh.shape) * sh.dtype.itemsize
+                  / _shard_factor(spec, mesh_shape))
+    # cache: read once (attention) + one-slot write
+    cache = jax.eval_shape(lambda: model_lib.init_cache(
+        cfg, shape.global_batch, shape.seq_len))
+    cax = model_lib.cache_axes(cfg)
+    for ax, sh in zip(jax.tree.leaves(cax, is_leaf=is_ax),
+                      jax.tree.leaves(cache)):
+        spec = rules.spec(tuple(ax), sh.shape, mesh)
+        total += (np.prod(sh.shape) * sh.dtype.itemsize
+                  / _shard_factor(spec, mesh_shape))
+    return float(total)
+
+
+# ---- table assembly --------------------------------------------------------------
+def build_table(dryrun_path: str, probe_path: str, mesh: str = "pod1"):
+    with open(dryrun_path) as f:
+        full = {(r["arch"], r["shape"]): r for r in json.load(f)
+                if r.get("status") == "ok" and r["mesh"] == mesh}
+    with open(probe_path) as f:
+        probes = {(r["arch"], r["shape"]): r for r in json.load(f)
+                  if r.get("status") == "ok"}
+
+    mesh_shape = {"data": 16, "model": 16} if mesh == "pod1" else \
+        {"pod": 2, "data": 16, "model": 16}
+    chips = int(np.prod(list(mesh_shape.values())))
+    rows = []
+    from .dryrun import PROBE_SEQ, PROBE_SEQ_DEFAULT, ACCUM
+    for (arch, shape_name), fr in sorted(full.items()):
+        pr = probes.get((arch, shape_name))
+        shape = SHAPES[shape_name]
+        cfg = configs.get(arch)
+        n_units, rem = cfg.layer_plan
+        units_eff = n_units + len(rem) / len(cfg.pattern)
+        row = dict(arch=arch, shape=shape_name, mesh=mesh, chips=chips,
+                   mem_per_device_gb=fr.get("mem_per_device_gb"),
+                   model_flops=fr.get("model_flops"),
+                   accum=fr.get("accum", 1),
+                   measured_flops_per_chip=fr.get("flops_per_chip"),
+                   measured_bytes_per_chip=fr.get("bytes_per_chip"),
+                   measured_coll_per_chip=fr.get("coll_bytes_per_chip"))
+        if pr:
+            seqs = PROBE_SEQ.get(arch, PROBE_SEQ_DEFAULT)
+            accum = ACCUM.get((arch, shape_name), 1)
+
+            quad = "attn" in cfg.pattern    # global attention => S^2 term
+
+            def ex(metric):
+                if shape.kind == "decode":
+                    return extrapolate_decode(pr["probes"], metric,
+                                              n_units=units_eff)
+                if shape.kind == "prefill":
+                    return extrapolate_prefill(
+                        pr["probes"], metric, target_seq=shape.seq_len,
+                        n_units=units_eff, probe_seqs=seqs, quadratic=quad)
+                return extrapolate_train(
+                    pr["probes"], metric, target_seq=shape.seq_len,
+                    n_units=units_eff, accum=accum, probe_seqs=seqs,
+                    quadratic=quad)
+
+            flops = ex("flops")
+            byts = ex("bytes")
+            coll = ex("coll")
+            # probes run at the per-microbatch batch size; scale flops/bytes
+            # by the batch ratio (train already multiplied by accum)
+            if shape.kind != "decode":
+                probe_batch = pr["probes"][f"u1_s{seqs[0]}"].get(
+                    "batch") or max(shape.global_batch // accum, 16)
+                ratio = (shape.global_batch / accum) / probe_batch \
+                    if shape.kind == "train" else \
+                    shape.global_batch / probe_batch
+                flops *= ratio
+                byts *= ratio
+                coll *= ratio
+            if shape.kind in ("decode", "prefill"):
+                byts_model = analytic_decode_bytes(arch, shape_name,
+                                                   mesh_shape) \
+                    if shape.kind == "decode" else byts
+            else:
+                byts_model = byts
+            row.update(flops_per_chip=flops, bytes_per_chip=byts_model,
+                       bytes_measured=byts,
+                       coll_per_chip=coll,
+                       t_compute=flops / PEAK_FLOPS_BF16,
+                       t_memory=byts_model / HBM_BW,
+                       t_collective=coll / ICI_BW)
+            terms = {"compute": row["t_compute"],
+                     "memory": row["t_memory"],
+                     "collective": row["t_collective"]}
+            row["bottleneck"] = max(terms, key=terms.get)
+            mf = fr.get("model_flops", 0.0)
+            row["useful_ratio"] = mf / max(flops * chips, 1.0)
+            row["roofline_fraction"] = (
+                (mf / chips / PEAK_FLOPS_BF16) / max(max(terms.values()),
+                                                     1e-12))
+        rows.append(row)
+    return rows
+
+
+def format_markdown(rows) -> str:
+    hdr = ("| arch | shape | comp ms | mem ms | coll ms | bottleneck | "
+           "useful % | roofline % | mem/dev GB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if "t_compute" not in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"(no probe) | - | - | "
+                         f"{r.get('mem_per_device_gb', float('nan')):.1f} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']*100:.0f} | "
+            f"{r['roofline_fraction']*100:.1f} | "
+            f"{(r.get('mem_per_device_gb') or float('nan')):.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun_results.json")
+    ap.add_argument("--probes", default="probe_results.json")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--out", default="roofline_table.json")
+    args = ap.parse_args()
+    rows = build_table(args.dryrun, args.probes, args.mesh)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(format_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

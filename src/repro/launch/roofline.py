@@ -1,0 +1,131 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+  memory term     = HLO_bytes / HBM_bw                 (per chip)
+  collective term = collective_bytes / link_bw         (per chip)
+
+`compiled.cost_analysis()` is evaluated on the *partitioned per-device*
+module, so flops/bytes are per chip already (verified in
+tests/test_roofline.py against a hand-checked sharded matmul).
+collective_bytes is not in cost_analysis: we parse the optimized HLO and sum
+the operand bytes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops (all-reduce counted twice: reduce + broadcast phases
+of a ring).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+from .mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO result type, e.g. 'f32[16,128]{1,0}' or a tuple
+    '(f32[4], bf16[8,8])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind from optimized (per-device) HLO.
+
+    We use the *result* shape of each op (for all-gather that is the gathered
+    output = bytes received; for reduce-scatter the reduced input is the
+    dominant traffic, approximated by result * group_size ~ operand)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # skip parameter/metadata lines; match "<name> = <shape> <op>(...)"
+        m = re.match(r"[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w-]+)", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        # normalize fused variants like 'all-reduce-start'
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-"):
+                out[kind] += _shape_bytes(shape_str)
+                break
+    return out
+
+
+def collective_traffic(byte_counts: Dict[str, int]) -> float:
+    """Per-chip wire traffic estimate: ring all-reduce moves ~2x the tensor,
+    all-gather/reduce-scatter ~1x, all-to-all ~1x, permute 1x."""
+    w = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+    return sum(byte_counts[k] * w[k] for k in byte_counts)
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float          # 6 * N_active * tokens (global)
+    useful_ratio: float         # model_flops / (flops_per_chip * chips)
+    mem_per_device_gb: Optional[float] = None
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: Dict[str, float], hlo_text: str,
+            model_flops: float,
+            mem_bytes: Optional[float] = None) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    coll_traffic = collective_traffic(coll)
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = byts / HBM_BW
+    t_x = coll_traffic / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=coll_traffic, coll_breakdown=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=model_flops / max(flops * chips, 1.0),
+        mem_per_device_gb=(mem_bytes / 2**30 if mem_bytes else None))
+
+
+def format_row(r: RooflineTerms) -> str:
+    return (f"{r.arch:>24} {r.shape:>12} {r.mesh:>5} "
+            f"comp={r.t_compute * 1e3:8.2f}ms mem={r.t_memory * 1e3:8.2f}ms "
+            f"coll={r.t_collective * 1e3:8.2f}ms -> {r.bottleneck:<10} "
+            f"useful={r.useful_ratio * 100:5.1f}% "
+            f"mem/dev={r.mem_per_device_gb if r.mem_per_device_gb is not None else float('nan'):.2f}GB")

@@ -1,0 +1,49 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
+        --steps 50 --batch 8 --seq 64 --ckpt /tmp/ckpt
+
+Full (non---reduced) configs are for real accelerators; on this CPU box use
+--reduced (same architecture family at smoke scale) or the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+
+from .. import configs
+from ..optim import adamw
+from ..runtime import train as train_mod
+from ..runtime.steps import StepSettings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b", choices=list(configs.ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    print(f"[train] {cfg.name} ({cfg.param_count()/1e6:.1f}M params)"
+          f"{' [reduced]' if args.reduced else ''}")
+    kw = dict(steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+              ckpt_dir=args.ckpt, opt_cfg=adamw.AdamWConfig(lr=args.lr),
+              settings=StepSettings(accum=args.accum))
+    if args.fail_at is not None:
+        rep = train_mod.run_with_restarts(cfg, fail_at_steps=[args.fail_at],
+                                          **kw)
+    else:
+        rep = train_mod.fit(cfg, **kw)
+    print(f"[train] {rep.steps_done} steps; loss "
+          f"{rep.losses[0]:.3f} -> {rep.losses[-1]:.3f}; "
+          f"restarts={rep.restarts} ckpts={rep.checkpoints}")
+
+
+if __name__ == "__main__":
+    main()

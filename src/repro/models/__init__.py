@@ -1,0 +1,3 @@
+"""Model zoo: one composable decoder covering all assigned architectures."""
+from .config import ModelConfig  # noqa: F401
+from . import attention, layers, model, moe, nn, rglru, rwkv6  # noqa: F401

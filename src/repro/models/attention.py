@@ -1,0 +1,272 @@
+"""GQA attention: full/causal, sliding-window, and decode-with-cache paths.
+
+Three compute strategies, all numerically equivalent:
+  * naive     -- materializes (B,H,S,T) scores; used for short sequences and
+                 as the oracle for the Pallas flash kernel.
+  * chunked   -- blockwise online-softmax over q- and kv-chunks (flash
+                 attention expressed in jnp): O(chunk^2) live memory. Used for
+                 long-context prefill/training so the 32k dry-run lowers with
+                 sane buffers.
+  * windowed  -- banded attention for sliding-window layers: each q-chunk
+                 attends only to its window slice: O(S * window) FLOPs.
+
+On TPU the Pallas kernel (repro.kernels.flash_attention) replaces the inner
+block computation; model code selects via `impl`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .nn import Initializer
+from ..runtime import sharding as shd
+
+NEG_INF = -1e30
+
+
+def init_attention(ini: Initializer, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.hd
+    ini.param("wq", (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"),
+              init="fan_in")
+    ini.param("wk", (d, cfg.n_kv_heads, hd), ("embed", "kv", "head_dim"),
+              init="fan_in")
+    ini.param("wv", (d, cfg.n_kv_heads, hd), ("embed", "kv", "head_dim"),
+              init="fan_in")
+    ini.param("wo", (cfg.n_heads, hd, d), ("heads", "head_dim", "embed"),
+              init="fan_in")
+
+
+def _expand_gqa(q, n_kv):
+    """(B,S,H,hd) -> (B,S,K,G,hd) grouping q-heads by kv head."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+                    window: int = 0):
+    """q (B,S,H,hd), k/v (B,T,K,hd). q_offset: absolute position of q[0]
+    relative to k[0] (scalar or (B,)). kv_len: valid cache entries (dynamic
+    scalar or per-row (B,))."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    scores = jnp.einsum("bskgd,btkd->bkgst", _expand_gqa(q, k.shape[2]), k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5)
+    q_offset = jnp.asarray(q_offset)
+    qpos = q_offset[..., None, None] + jnp.arange(s)[:, None]  # (..., s, 1)
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.broadcast_to(jnp.ones((s, t), bool), qpos.shape[:-2] + (s, t))
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        mask = mask & (kpos[None] < kv_len.reshape(-1, 1, 1)) \
+            if kv_len.ndim else mask & (kpos < kv_len)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]        # (1,1,1,s,t)
+    else:
+        mask = mask[:, None, None]           # (b,1,1,s,t)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      kv_chunk: int = 1024, window: int = 0):
+    """Blockwise online-softmax attention (flash in jnp).
+
+    Causal structure is exploited at block granularity: kv blocks entirely in
+    the future of a q block are skipped by masking; for sliding windows only
+    the in-window band of kv blocks is gathered.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    nkv = k.shape[2]
+    g = h // nkv
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    assert s % q_chunk == 0 and t % kv_chunk == 0
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = hd ** -0.5
+
+    if window > 0:
+        return _windowed_attention(q, k, v, q_chunk=q_chunk, window=window)
+
+    qr = q.reshape(b, nq, q_chunk, h, hd)
+    kr = k.reshape(b, nk, kv_chunk, nkv, hd)
+    vr = v.reshape(b, nk, kv_chunk, nkv, hd)
+
+    def per_q_chunk(qi, qc):
+        # qc: (B, q_chunk, H, hd)
+        qg = qc.reshape(b, q_chunk, nkv, g, hd)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            ki, kc, vc = inp
+            sc = jnp.einsum("bqkgd,btkd->bkgqt", qg, kc,
+                            preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                sc = jnp.where((kpos <= qpos)[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, nkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, nkv, g, q_chunk, hd), q.dtype)
+        carry = (m0, l0, a0)
+        if flags.unroll_scans():
+            for ki in range(nk):
+                # causal block skip is free when unrolled
+                if causal and isinstance(qi, int) \
+                        and ki * kv_chunk > qi * q_chunk + q_chunk - 1:
+                    continue
+                carry, _ = body(carry, (ki, kr[:, ki], vr[:, ki]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                body, carry,
+                (jnp.arange(nk), kr.swapaxes(0, 1), vr.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-20)[..., None].astype(acc.dtype)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, hd)
+
+    if flags.unroll_scans():
+        outs = jnp.stack([per_q_chunk(i, qr[:, i]) for i in range(nq)])
+    else:
+        outs = jax.lax.map(lambda i: per_q_chunk(i, qr[:, i]),
+                           jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def _windowed_attention(q, k, v, *, q_chunk: int, window: int):
+    """Sliding-window causal attention: each q chunk attends to a slice
+    [start, start + q_chunk + window) of kv. FLOPs ~ S*(window+chunk)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    nkv = k.shape[2]
+    g = h // nkv
+    nq = s // q_chunk
+    scale = hd ** -0.5
+    span = q_chunk + window  # kv slice length per q chunk
+
+    def per_chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
+        start = jnp.maximum(qi * q_chunk - window, 0)
+        start = jnp.minimum(start, jnp.maximum(t - span, 0))
+        kc = jax.lax.dynamic_slice_in_dim(k, start, min(span, t), 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, min(span, t), 1)
+        qg = qc.reshape(b, q_chunk, nkv, g, hd)
+        sc = jnp.einsum("bqkgd,btkd->bkgqt", qg, kc,
+                        preferred_element_type=jnp.float32) * scale
+        qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+        kpos = start + jnp.arange(min(span, t))[None, :]
+        mask = (kpos <= qpos) & (kpos > qpos - window)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, hd)
+
+    if flags.unroll_scans():
+        outs = jnp.stack([per_chunk(i) for i in range(nq)])
+    else:
+        outs = jax.lax.map(per_chunk, jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0):
+    """Single-token decode: q (B,1,H,hd) against cache (B,T,K,hd) with
+    `kv_len` valid entries. Linear in T; the cache may be sharded on T
+    (sequence-parallel decode) — GSPMD turns the masked reductions into
+    partial-softmax psums (flash-decoding on ICI)."""
+    return naive_attention(q, k_cache, v_cache, causal=False,
+                           kv_len=kv_len, window=0 if window == 0 else window,
+                           q_offset=kv_len - 1)
+
+
+def attention_block(p, cfg: ModelConfig, x, *, pos, cos_sin, causal=True,
+                    window=0, cache=None, kv_len=None, impl="auto"):
+    """Full attention sub-block: qkv proj -> rope -> attention -> out proj.
+
+    cache: optional dict with 'k','v' (B,T,K,hd) to read/update.
+    kv_len: valid cache length *including* the current tokens' positions.
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = shd.constrain(q, ("batch", "seq", "heads", "head_dim"))
+    if cos_sin is not None:
+        cos, sin = cos_sin
+        q = layers_apply_rope(q, cos, sin)
+        k = layers_apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        # write current kv at [kv_len - s, kv_len); kv_len may be per-row (B,)
+        kv_vec = jnp.asarray(kv_len)
+        if kv_vec.ndim == 1 and s == 1:
+            rows = jnp.arange(b)
+            kc = cache["k"].at[rows, kv_vec - 1].set(k[:, 0])
+            vc = cache["v"].at[rows, kv_vec - 1].set(v[:, 0])
+        else:
+            start = (kv_vec if kv_vec.ndim == 0 else kv_vec[0]) - s
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, start,
+                                                     axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, start,
+                                                     axis=1)
+        new_cache = {"k": kc, "v": vc}
+        if s == 1:
+            # flash-decoding layout: replicate the (tiny) single-token q
+            # across the model axis so the seq-sharded cache never gathers
+            q = shd.constrain(q, ("batch", "seq", "attn_act_heads",
+                                  "head_dim"))
+            out = decode_attention(q, kc, vc, kv_len, window=window)
+            out = shd.constrain(out, ("batch", "seq", "attn_act_heads",
+                                      "head_dim"))
+        else:
+            # prefill: attend over the written prefix only (cache beyond is 0)
+            out = _prefill_over_cache(q, kc, vc, kv_len, causal=causal,
+                                      window=window)
+    else:
+        t = k.shape[1]
+        if impl == "naive" or (impl == "auto" and s <= 1024 and t <= 1024):
+            out = naive_attention(q, k, v, causal=causal, window=window)
+        else:
+            # NOTE (§Perf R6): explicit once-per-layer gather constraints
+            # around this path were tried and MEASURED WORSE (63.7GB vs
+            # 51.9GB wire) than letting GSPMD place the gathers; a true fix
+            # is shard_map ring attention (future work).
+            out = chunked_attention(q, k, v, causal=causal, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def _prefill_over_cache(q, kc, vc, kv_len, *, causal, window):
+    """Prefill path: q for the s new tokens, cache holds kv_len total."""
+    s = q.shape[1]
+    if window > 0:
+        return _windowed_attention(q, kc[:, :s], vc[:, :s],
+                                   q_chunk=min(512, s), window=window)
+    # new tokens start at kv_len - s
+    if s <= 1024:
+        return naive_attention(q, kc, vc, causal=causal, kv_len=kv_len,
+                               q_offset=kv_len - s)
+    return chunked_attention(q, kc[:, :s], vc[:, :s], causal=causal)
+
+
+# late import to avoid cycle
+from .layers import apply_rope as layers_apply_rope  # noqa: E402
+from . import flags  # noqa: E402

@@ -1,0 +1,31 @@
+"""Global trace-time flags.
+
+UNROLL_SCANS: when True, every internal `lax.scan`/`lax.map` over chunks or
+layer units is replaced by a python loop at trace time. Used by the roofline
+probes: XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+count, so probe compiles must be scan-free for flops/bytes/collective counts
+to be exact. Never enabled for real training (HLO size explodes).
+"""
+_UNROLL_SCANS = False
+
+
+def set_unroll_scans(v: bool):
+    global _UNROLL_SCANS
+    _UNROLL_SCANS = bool(v)
+
+
+def unroll_scans() -> bool:
+    return _UNROLL_SCANS
+
+
+class unrolled_scans:
+    def __enter__(self):
+        global _UNROLL_SCANS
+        self._prev = _UNROLL_SCANS
+        _UNROLL_SCANS = True
+        return self
+
+    def __exit__(self, *exc):
+        global _UNROLL_SCANS
+        _UNROLL_SCANS = self._prev
+        return False

@@ -1,0 +1,128 @@
+"""Shared layers: norms, embeddings, rotary variants, MLPs."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .nn import Initializer
+from ..runtime import sharding as shd
+
+
+# ---- norms -------------------------------------------------------------------
+def init_rmsnorm(ini: Initializer, name: str, dim: int):
+    ini.param(name, (dim,), ("embed",), init="ones")
+
+
+def rmsnorm(w, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---- rotary embeddings ---------------------------------------------------------
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (B,S,H,hd); cos/sin (B,S,hd/2) or (S,hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def mrope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                 sections=(2, 3, 3)):
+    """Multimodal RoPE (Qwen2-VL): positions (B,S,3) = (t,h,w) components;
+    the rotary half-dims are split across sections proportionally 2:3:3."""
+    half = head_dim // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    cos_parts, sin_parts = [], []
+    off = 0
+    for comp in range(3):
+        f = freqs[off:off + sizes[comp]]
+        ang = positions[..., comp][..., None].astype(jnp.float32) * f
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        off += sizes[comp]
+    return jnp.concatenate(cos_parts, -1), jnp.concatenate(sin_parts, -1)
+
+
+def sinusoidal_embedding(positions: jnp.ndarray, dim: int):
+    """Absolute sinusoidal position embedding (MusicGen)."""
+    half = dim // 2
+    freqs = 10_000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---- dense / gated MLP ---------------------------------------------------------
+def init_mlp(ini: Initializer, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.gated:
+        ini.param("wi_gate", (d, f), ("embed", "mlp"), init="fan_in")
+    ini.param("wi", (d, f), ("embed", "mlp"), init="fan_in")
+    ini.param("wo", (f, d), ("mlp", "embed"), init="fan_in")
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.act in ("swiglu",):
+        return jax.nn.silu(x)
+    if cfg.act == "geglu":
+        return jax.nn.gelu(x)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    if cfg.act == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(cfg.act)
+
+
+def mlp(p, cfg: ModelConfig, x):
+    h = x @ p["wi"]
+    if cfg.gated:
+        h = _act(cfg, x @ p["wi_gate"]) * h
+    else:
+        h = _act(cfg, h)
+    h = shd.constrain(h, ("batch", "seq", "mlp"))
+    return h @ p["wo"]
+
+
+# ---- embedding ----------------------------------------------------------------
+def init_embed(ini: Initializer, cfg: ModelConfig):
+    # N(0, 1/d): combined with the sqrt(d) input multiplier this gives unit
+    # variance inputs AND sane tied-logit magnitudes at init
+    ini.param("embedding", (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+              init="normal", scale=cfg.d_model ** -0.5)
+    if not cfg.tie_embeddings:
+        ini.param("head", (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                  init="fan_in")
+
+
+def embed(p, cfg: ModelConfig, tokens: jnp.ndarray):
+    x = p["embedding"][tokens].astype(cfg.compute_dtype)
+    return x * math.sqrt(cfg.d_model)
+
+
+def unembed(p, cfg: ModelConfig, x: jnp.ndarray):
+    if cfg.tie_embeddings:
+        return x @ p["embedding"].T.astype(cfg.compute_dtype)
+    return x @ p["head"].astype(cfg.compute_dtype)

@@ -1,0 +1,399 @@
+"""The composable decoder: one model definition covering all 10 assigned
+architectures via the config's block pattern ('attn'|'local'|'rec'|'rwkv'),
+MLP kind (dense / MoE / RWKV channel-mix) and rope variant.
+
+Layers are grouped into repeated *pattern units* (e.g. gemma3: 5 local + 1
+global; recurrentgemma: rec,rec,local). Units are stacked and executed with
+`jax.lax.scan` (+ remat) so deep models lower to compact HLO; the remainder
+(n_layers % unit) is unrolled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, moe, rglru, rwkv6
+from .config import ModelConfig
+from .nn import Initializer, stack_params, stack_axes
+from ..runtime import sharding as shd
+
+
+# ---- init --------------------------------------------------------------------
+def _init_block(ini: Initializer, cfg: ModelConfig, kind: str):
+    layers.init_rmsnorm(ini, "norm1", cfg.d_model)
+    layers.init_rmsnorm(ini, "norm2", cfg.d_model)
+    mixer = ini.scope("mixer")
+    if kind in ("attn", "local"):
+        attention.init_attention(mixer, cfg)
+    elif kind == "rec":
+        rglru.init_rglru(mixer, cfg)
+    elif kind == "rwkv":
+        rwkv6.init_rwkv(mixer, cfg)
+    else:
+        raise ValueError(kind)
+    ffn = ini.scope("ffn")
+    if kind == "rwkv":
+        rwkv6.init_rwkv_cm(ffn, cfg)
+    elif cfg.is_moe:
+        moe.init_moe(ffn, cfg)
+    else:
+        layers.init_mlp(ffn, cfg)
+
+
+def _init_unit(key, cfg: ModelConfig):
+    ini = Initializer(key, cfg.param_dtype)
+    for j, kind in enumerate(cfg.pattern):
+        _init_block(ini.scope(f"b{j}"), cfg, kind)
+    return ini.params, ini.axes
+
+
+def init_model(key: jax.Array, cfg: ModelConfig):
+    """Returns (params, logical_axes) trees."""
+    n_full, rem = cfg.layer_plan
+    keys = jax.random.split(key, n_full + len(rem) + 2)
+    ini = Initializer(keys[0], cfg.param_dtype)
+    layers.init_embed(ini, cfg)
+    layers.init_rmsnorm(ini, "final_norm", cfg.d_model)
+    params, axes = ini.params, ini.axes
+
+    unit_trees = [_init_unit(keys[1 + i], cfg) for i in range(n_full)]
+    params["units"] = stack_params([t[0] for t in unit_trees])
+    axes["units"] = stack_axes(unit_trees[0][1])
+
+    for i, kind in enumerate(rem):
+        rini = Initializer(keys[1 + n_full + i], cfg.param_dtype)
+        _init_block(rini, cfg, kind)
+        params[f"rem_{i}"] = rini.params
+        axes[f"rem_{i}"] = rini.axes
+    return params, axes
+
+
+def model_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct tree of the parameters (no allocation) + axes tree."""
+    captured = {}
+
+    def f(k):
+        p, a = init_model(k, cfg)
+        captured["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.key(0))
+    return shapes, captured["axes"]
+
+
+# ---- cache --------------------------------------------------------------------
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("attn", "local"):
+        kv = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    if kind == "rec":
+        return {"h": jnp.zeros((batch, cfg.rnn_w), dtype),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_w),
+                                  dtype)}
+    if kind == "rwkv":
+        nh = cfg.d_model // cfg.rwkv_head_dim
+        return {"S": jnp.zeros((batch, nh, cfg.rwkv_head_dim,
+                                cfg.rwkv_head_dim), dtype),
+                "shift": jnp.zeros((batch, cfg.d_model), dtype),
+                "shift_cm": jnp.zeros((batch, cfg.d_model), dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               stacked: bool = True):
+    """stacked=True: per-unit leaves carry a leading layer axis (scan-based
+    prefill). stacked=False: a python list of per-unit trees — the decode
+    layout, where each layer's cache aliases in place (no full-cache copies
+    through the unrolled step)."""
+    dtype = cfg.compute_dtype
+    n_full, rem = cfg.layer_plan
+    def unit():
+        return {f"b{j}": _block_cache(cfg, k, batch, max_len, dtype)
+                for j, k in enumerate(cfg.pattern)}
+    if stacked:
+        cache = {"units": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_full,) + x.shape).copy(),
+            unit())}
+    else:
+        cache = {"units": [unit() for _ in range(n_full)]}
+    for i, kind in enumerate(rem):
+        cache[f"rem_{i}"] = _block_cache(cfg, kind, batch, max_len, dtype)
+    return cache
+
+
+def cache_axes(cfg: ModelConfig, stacked: bool = True):
+    """Logical axes for the cache tree (KV sharded on kv_seq for SP decode)."""
+    kv_ax = ("batch", "kv_seq", "kv", "head_dim")
+
+    def block_ax(kind):
+        if kind in ("attn", "local"):
+            return {"k": kv_ax, "v": kv_ax}
+        if kind == "rec":
+            return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+        if kind == "rwkv":
+            return {"S": ("batch", None, None, None),
+                    "shift": ("batch", "embed"),
+                    "shift_cm": ("batch", "embed")}
+    n_full, rem = cfg.layer_plan
+    unit = {f"b{j}": block_ax(k) for j, k in enumerate(cfg.pattern)}
+    if stacked:
+        axes = {"units": jax.tree.map(lambda a: ("layers",) + tuple(a), unit,
+                                      is_leaf=lambda x: isinstance(x, tuple))}
+    else:
+        import copy
+        axes = {"units": [copy.deepcopy(unit) for _ in range(n_full)]}
+    for i, kind in enumerate(rem):
+        axes[f"rem_{i}"] = block_ax(kind)
+    return axes
+
+
+# ---- forward ------------------------------------------------------------------
+def _apply_block(bp, cfg: ModelConfig, kind: str, x, cos_sin, cache, kv_len):
+    aux = jnp.float32(0)
+    h = layers.rmsnorm(bp["norm1"], x)
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        mix, new_c = attention.attention_block(
+            bp["mixer"], cfg, h, pos=None, cos_sin=cos_sin, causal=True,
+            window=window, cache=cache, kv_len=kv_len)
+        new_cache = new_c
+    elif kind == "rec":
+        mix, new_cache = rglru.rglru_block(bp["mixer"], cfg, h, cache=cache)
+    elif kind == "rwkv":
+        sub = ({"shift": cache["shift"], "S": cache["S"]}
+               if cache is not None else None)
+        mix, nc = rwkv6.rwkv_time_mix(bp["mixer"], cfg, h, cache=sub)
+        new_cache = dict(nc) if nc is not None else None
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    h = layers.rmsnorm(bp["norm2"], x)
+    if kind == "rwkv":
+        cm_cache = ({"shift": cache["shift_cm"]} if cache is not None
+                    else None)
+        f, cmc = rwkv6.rwkv_channel_mix(bp["ffn"], cfg, h, cache=cm_cache)
+        if new_cache is not None:
+            new_cache["shift_cm"] = cmc["shift"]
+    elif cfg.is_moe:
+        f, aux = moe.moe_block(bp["ffn"], cfg, h)
+    else:
+        f = layers.mlp(bp["ffn"], cfg, h)
+    x = x + f
+    x = shd.constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+def _apply_unit(up, cfg: ModelConfig, x, cos_sin, ucache, kv_len):
+    aux = jnp.float32(0)
+    new_cache = {}
+    for j, kind in enumerate(cfg.pattern):
+        c = ucache[f"b{j}"] if ucache is not None else None
+        x, nc, a = _apply_block(up[f"b{j}"], cfg, kind, x, cos_sin, c, kv_len)
+        new_cache[f"b{j}"] = nc
+        aux += a
+    return x, new_cache, aux
+
+
+def _positions(cfg: ModelConfig, batch, s, kv_len):
+    if kv_len is None:
+        return jnp.arange(s)[None, :].repeat(batch, 0)
+    kv = jnp.asarray(kv_len)
+    if kv.ndim == 1:                       # per-row lengths (serving)
+        return (kv[:, None] - s) + jnp.arange(s)[None, :]
+    return (kv - s) + jnp.arange(s)[None, :].repeat(batch, 0)
+
+
+def _cos_sin(cfg: ModelConfig, pos):
+    if cfg.rope == "standard":
+        return layers.rope_angles(pos, cfg.hd, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        # stub multimodal positions: frontend prefix is an 8x8 grid (t=0),
+        # text positions use (t,h,w) = (i,i,i) per Qwen2-VL
+        nf = cfg.frontend_tokens if cfg.frontend != "none" else 0
+        b, s = pos.shape
+        grid_h = (jnp.arange(s) % 8)
+        grid_w = (jnp.arange(s) // 8 % 8)
+        is_front = (pos < nf)
+        t = jnp.where(is_front, 0, pos - nf)
+        h = jnp.where(is_front, grid_h[None], pos - nf)
+        w = jnp.where(is_front, grid_w[None], pos - nf)
+        pos3 = jnp.stack([t, h, w], axis=-1)
+        return layers.mrope_angles(pos3, cfg.hd, cfg.rope_theta)
+    return None
+
+
+def backbone(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
+             cache=None, kv_len=None, remat: bool = True,
+             scan_groups: int = 0, unroll_units: bool = False):
+    """tokens (B,S) -> final hidden states (B,S,d).
+
+    extra_embeds: (B, frontend_tokens, d) precomputed patch/frame embeddings
+    (the modality frontend stub per the assignment) — overwrite the embedding
+    of the first `frontend_tokens` positions.
+    Returns (hidden, new_cache, aux_loss).
+    """
+    b, s = tokens.shape
+    x = layers.embed(params, cfg, tokens)
+    if extra_embeds is not None:
+        nf = extra_embeds.shape[1]
+        x = jnp.concatenate(
+            [extra_embeds.astype(x.dtype), x[:, nf:]], axis=1)
+    pos = _positions(cfg, b, s, kv_len)
+    if cfg.rope == "sinusoidal":
+        x = x + layers.sinusoidal_embedding(pos, cfg.d_model).astype(x.dtype)
+        cos_sin = None
+    else:
+        cos_sin = _cos_sin(cfg, pos)
+    x = shd.constrain(x, ("batch", "seq", "embed"))
+
+    aux_total = jnp.float32(0)
+    n_full, rem = cfg.layer_plan
+
+    if unroll_units:
+        # python loop over units (no lax.scan): used by the roofline probes
+        # (cost_analysis must see every unit's ops) and by production decode
+        # (no scan latency; with the unstacked cache layout each layer's
+        # cache leaf aliases its own donated buffer)
+        ucaches = cache["units"] if cache is not None else None
+        is_list = isinstance(ucaches, list)
+        new_units = [] if cache is not None else None
+        stacked = None if (ucaches is None or is_list) else ucaches
+        for i in range(n_full):
+            up = jax.tree.map(lambda a: a[i], params["units"])
+            if ucaches is None:
+                uc = None
+            elif is_list:
+                uc = ucaches[i]
+            else:
+                uc = jax.tree.map(lambda a: a[i], stacked)
+            fn = (jax.checkpoint(
+                lambda up_, x_: _apply_unit(up_, cfg, x_, cos_sin, None,
+                                            kv_len)[::2])
+                  if (remat and cache is None) else None)
+            if fn is not None:
+                x, a = fn(up, x)
+                nc = None
+            else:
+                x, nc, a = _apply_unit(up, cfg, x, cos_sin, uc, kv_len)
+            aux_total += a
+            if cache is not None:
+                if is_list:
+                    new_units.append(nc)
+                else:
+                    stacked = jax.tree.map(
+                        lambda full, new: full.at[i].set(new), stacked, nc)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"units": new_units if is_list else stacked}
+        for i in range(len(rem)):
+            c = cache[f"rem_{i}"] if cache is not None else None
+            x, nc, a = _apply_block(params[f"rem_{i}"], cfg, rem[i], x,
+                                    cos_sin, c, kv_len)
+            aux_total += a
+            if cache is not None:
+                new_cache[f"rem_{i}"] = nc
+        x = layers.rmsnorm(params["final_norm"], x)
+        return x, new_cache, aux_total
+
+    if remat and cache is None:
+        unit_fn_ = jax.checkpoint(
+            lambda up, x: _apply_unit(up, cfg, x, cos_sin, None, kv_len)[::2])
+
+        def scan_body(carry, up):
+            x, aux = carry
+            x2, a = unit_fn_(up, x)
+            return (x2, aux + a), None
+
+        if scan_groups > 1 and n_full % scan_groups == 0:
+            # two-level remat: checkpoint whole groups of units (sqrt-style
+            # activation memory for very deep models)
+            gs = n_full // scan_groups
+            grouped = jax.tree.map(
+                lambda a: a.reshape((scan_groups, gs) + a.shape[1:]),
+                params["units"])
+
+            @jax.checkpoint
+            def group_fn(gp, carry):
+                def body(c, up):
+                    x2, _, a = _apply_unit(up, cfg, c[0], cos_sin, None,
+                                           kv_len)
+                    return (x2, c[1] + a), None
+                return jax.lax.scan(body, carry, gp)[0]
+
+            def outer(carry, gp):
+                return group_fn(gp, carry), None
+
+            (x, aux_total), _ = jax.lax.scan(outer, (x, aux_total), grouped)
+        else:
+            (x, aux_total), _ = jax.lax.scan(
+                scan_body, (x, aux_total), params["units"])
+        new_cache = None
+    else:
+        def scan_body(carry, inp):
+            x, aux = carry
+            up, uc = inp
+            x2, nc, a = _apply_unit(up, cfg, x, cos_sin, uc, kv_len)
+            return (x2, aux + a), nc
+
+        ucaches = cache["units"] if cache is not None else None
+        if ucaches is None:
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, up: ((_apply_unit(up, cfg, c[0], cos_sin, None,
+                                            kv_len)[0],
+                                c[1]), None),
+                (x, aux_total), params["units"])
+            new_units = None
+        else:
+            (x, aux_total), new_units = jax.lax.scan(
+                scan_body, (x, aux_total), (params["units"], ucaches))
+        new_cache = {"units": new_units} if cache is not None else None
+
+    for i in range(len(rem)):
+        c = cache[f"rem_{i}"] if cache is not None else None
+        x, nc, a = _apply_block(params[f"rem_{i}"], cfg, rem[i], x, cos_sin,
+                                c, kv_len)
+        aux_total += a
+        if cache is not None:
+            new_cache[f"rem_{i}"] = nc
+
+    x = layers.rmsnorm(params["final_norm"], x)
+    return x, new_cache, aux_total
+
+
+def lm_loss(params, cfg: ModelConfig, hidden, labels, mask=None,
+            chunk: int = 512, z_loss: float = 1e-4, unroll: bool = False):
+    """Chunked cross-entropy: never materializes (B,S,V) logits."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    def body(acc, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, 1)
+        lab = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        msk = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 1)
+        logits = layers.unembed(params, cfg, h).astype(jnp.float32)
+        logits = shd.constrain(logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * msk
+        zl = z_loss * jnp.square(lse) * msk
+        return (acc[0] + ce.sum() + zl.sum(), acc[1] + msk.sum()), None
+
+    acc = (jnp.float32(0), jnp.float32(0))
+    if unroll:
+        for i in range(nc):
+            acc, _ = body(acc, i)
+        tot, cnt = acc
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, acc, jnp.arange(nc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def logits_for(params, cfg: ModelConfig, hidden):
+    return layers.unembed(params, cfg, hidden).astype(jnp.float32)

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts layer (granite-moe, grok-1).
+
+Token-choice top-k routing with capacity-bounded scatter dispatch:
+
+  * 'tp' mode (default): experts are NOT sharded across devices; their ff dim
+    is tensor-sharded on `model` and the weights are ZeRO/FSDP-sharded for
+    storage. Dispatch is a local scatter (no all-to-all). Robust for any
+    expert count (grok has 8 experts on a 16-way model axis).
+  * 'ep' mode: experts sharded on `model` via grouped dispatch einsums with
+    all-to-all (classic Mesh-TF formulation); requires n_experts % model == 0.
+    Used in the §Perf hillclimb for granite (32 experts).
+
+FLOPs honesty: capacity dispatch computes exactly top_k * tokens * cf
+token-expert pairs — no dense all-experts fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .nn import Initializer
+from ..runtime import sharding as shd
+
+
+def init_moe(ini: Initializer, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ini.param("router", (d, e), ("embed", "expert"), init="fan_in")
+    if cfg.gated:
+        ini.param("wi_gate", (e, d, f), ("expert", "embed", "mlp"),
+                  init="fan_in")
+    ini.param("wi", (e, d, f), ("expert", "embed", "mlp"), init="fan_in")
+    ini.param("wo", (e, f, d), ("expert", "mlp", "embed"), init="fan_in")
+
+
+def _route(p, cfg: ModelConfig, x):
+    """x (N,d) -> (gates (N,K), experts (N,K), aux_loss)."""
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[experts.reshape(-1)].add(
+        1.0) / max(experts.size, 1)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return gates, experts, aux
+
+
+def moe_block(p, cfg: ModelConfig, x, *, capacity_factor: float = None,
+              mode: str = "tp"):
+    """x (B,S,d) -> (out (B,S,d), aux_loss).
+
+    Dispatch is *per batch row* so the one-hot position cumsum runs along the
+    (replicated) S*K axis and every scatter/gather is local to the batch
+    shard — no cross-device communication from routing itself.
+    """
+    b, s, d = x.shape
+    if capacity_factor is None:
+        capacity_factor = cfg.capacity_factor
+    gates, experts, aux = _route(p, cfg, x.reshape(b * s, d))
+    k, e = cfg.top_k, cfg.n_experts
+    cap = int(max(1, round(s * k * capacity_factor / e)))
+    gates = gates.reshape(b, s, k)
+    experts = experts.reshape(b, s, k)
+
+    # position of each (token, slot) within its expert, per batch row
+    ex = experts.reshape(b, s * k)
+    oh = jax.nn.one_hot(ex, e, dtype=jnp.int32)             # (B, S*K, E)
+    pos = jnp.cumsum(oh, axis=1) - 1
+    pos = (pos * oh).sum(-1)                                # (B, S*K)
+    keep = pos < cap
+    tok = jnp.repeat(jnp.arange(s), k)[None].repeat(b, 0)   # (B, S*K)
+    b_ix = jnp.arange(b)[:, None].repeat(s * k, 1)
+
+    # scatter tokens into (B, E, cap, d) expert buffers (drops vanish via OOB)
+    ebuf = jnp.zeros((b, e, cap, d), x.dtype)
+    ebuf = ebuf.at[b_ix, jnp.where(keep, ex, e),
+                   jnp.minimum(pos, cap - 1)].set(x[b_ix, tok])
+    ebuf = shd.constrain(ebuf, ("batch", "expert", None, "embed"))
+
+    # expert FFN: (B,E,C,d) x (E,d,f) -> (B,E,C,f) -> (B,E,C,d)
+    h = jnp.einsum("becd,edf->becf", ebuf, p["wi"])
+    if cfg.gated:
+        g = jnp.einsum("becd,edf->becf", ebuf, p["wi_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shd.constrain(h, ("batch", "expert", None, "mlp"))
+    eout = jnp.einsum("becf,efd->becd", h, p["wo"])
+
+    # gather back and combine with gates
+    got = eout[b_ix, jnp.where(keep, ex, 0), jnp.minimum(pos, cap - 1)]
+    got = jnp.where(keep[..., None], got, 0)                # (B, S*K, d)
+    combined = (got.reshape(b, s, k, d)
+                * gates[..., None].astype(x.dtype)).sum(axis=2)
+    return combined, aux

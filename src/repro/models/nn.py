@@ -1,0 +1,86 @@
+"""Minimal functional parameter system (flax is not available offline).
+
+Params are nested dicts of arrays. Every initializer also records the
+*logical sharding axes* of each parameter in a parallel tree of tuples, which
+`repro.runtime.sharding` maps onto the physical mesh per architecture.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+class Initializer:
+    """Collects params and their logical axes while building a module tree."""
+
+    def __init__(self, key: jax.Array, param_dtype=jnp.float32):
+        self._key = key
+        self.param_dtype = param_dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def scope(self, name: str) -> "Initializer":
+        sub = Initializer.__new__(Initializer)
+        sub._key = self._next()
+        sub.param_dtype = self.param_dtype
+        sub.params = self.params.setdefault(name, {})
+        sub.axes = self.axes.setdefault(name, {})
+        return sub
+
+    def param(self, name: str, shape: Tuple[int, ...], axes: Tuple,
+              init: str = "normal", scale: Optional[float] = None,
+              dtype=None) -> jnp.ndarray:
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = dtype or self.param_dtype
+        if init == "zeros":
+            v = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, dtype)
+        elif init == "normal":
+            std = scale if scale is not None else 0.02
+            v = (jax.random.normal(self._next(), shape, jnp.float32)
+                 * std).astype(dtype)
+        elif init == "fan_in":
+            fan_in = shape[0] if len(shape) >= 1 else 1
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(self._next(), shape, jnp.float32)
+                 * std).astype(dtype)
+        elif init == "uniform":
+            s = scale if scale is not None else 1.0
+            v = (jax.random.uniform(self._next(), shape, jnp.float32,
+                                    -s, s)).astype(dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = v
+        self.axes[name] = axes
+        return v
+
+
+def stack_params(trees):
+    """Stack a list of identically-structured param trees along a new leading
+    'layers' axis (for scan-over-layers)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_axes(axes_tree):
+    """Prepend the 'layers' logical axis to every leaf of an axes tree."""
+    return jax.tree.map(lambda a: ("layers",) + tuple(a), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def tree_bytes(params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))

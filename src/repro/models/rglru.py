@@ -1,0 +1,125 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU gated linear
+recurrence (arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t)              (recurrence gate)
+    i_t = sigmoid(W_x x_t)              (input gate)
+    log a_t = -c * softplus(Lambda) * r_t            (c = 8)
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t)
+
+The recurrence is evaluated with a *chunked* linear scan in log space: within
+a chunk of C tokens the solution is a lower-triangular (C x C) matmul (MXU
+friendly — this is the formulation the Pallas kernel uses); chunks are chained
+with a lax.scan carrying h. All decay factors are exp(<=0), numerically safe.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import flags
+from .config import ModelConfig
+from .nn import Initializer
+from ..runtime import sharding as shd
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def init_rglru(ini: Initializer, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.rnn_w
+    ini.param("w_in", (d, w), ("embed", "rnn"), init="fan_in")
+    ini.param("w_gate", (d, w), ("embed", "rnn"), init="fan_in")
+    ini.param("w_out", (w, d), ("rnn", "embed"), init="fan_in")
+    ini.param("conv_w", (cfg.conv_width, w), (None, "rnn"), init="fan_in")
+    ini.param("conv_b", (w,), ("rnn",), init="zeros")
+    ini.param("w_a", (w, w), ("rnn", "rnn"), init="fan_in")
+    ini.param("w_x", (w, w), ("rnn", "rnn"), init="fan_in")
+    # Lambda parameterized so a^c starts in [0.9, 0.999]
+    ini.param("lam", (w,), ("rnn",), init="uniform", scale=1.0)
+
+
+def chunked_linear_scan(log_a, b, h0, chunk: int = 128):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t, over axis 1 of (B,S,W).
+
+    Returns (h_all (B,S,W), h_last (B,W)). log_a <= 0.
+
+    Within a chunk:  h_i = exp(cs_i) * (h0 + sum_{j<=i} exp(-cs_j) b_j)
+    — a cumsum, never materializing the (C,C,W) pairwise-decay tensor.
+    RG-LRU decays are mild (log_a ~ -0.05), so |cs| < ~13 at chunk=128 and
+    exp(-cs) cannot overflow. (The Pallas kernel uses the same factoring
+    with tril matmuls for the MXU.)
+    """
+    bsz, s, w = b.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    la = log_a.reshape(bsz, nc, chunk, w)
+    bb = b.reshape(bsz, nc, chunk, w)
+    csum = jnp.cumsum(la, axis=2)                      # (B,NC,C,W)
+
+    def body(h, inp):
+        la_c, b_c, cs = inp                            # (B,C,W)
+        e_neg = jnp.exp(-cs) * b_c.astype(jnp.float32)
+        inner = jnp.cumsum(e_neg, axis=1)
+        h_all = jnp.exp(cs) * (inner + h[:, None, :])
+        return h_all[:, -1], h_all
+
+    if flags.unroll_scans():
+        h = h0.astype(jnp.float32)
+        outs = []
+        for c in range(nc):
+            h, h_all = body(h, (la[:, c], bb[:, c], csum[:, c]))
+            outs.append(h_all)
+        hs = jnp.stack(outs, axis=1).reshape(bsz, s, w)
+        return hs, h
+    h_last, hs = jax.lax.scan(
+        body, h0.astype(jnp.float32),
+        (la.swapaxes(0, 1), bb.swapaxes(0, 1), csum.swapaxes(0, 1)))
+    hs = hs.swapaxes(0, 1).reshape(bsz, s, w)
+    return hs, h_last
+
+
+def rglru_block(p, cfg: ModelConfig, x, *, cache=None):
+    """x (B,S,d) -> (out, new_cache). cache = {'h': (B,W), 'conv': (B,cw-1,W)}."""
+    bsz, s, d = x.shape
+    w = cfg.rnn_w
+    dt = x.dtype
+    xb = x @ p["w_in"]                         # (B,S,W)
+    gate = x @ p["w_gate"]
+    xb = shd.constrain(xb, ("batch", "seq", "rnn"))
+
+    # causal depthwise conv1d (width cw)
+    cw = cfg.conv_width
+    if cache is not None:
+        prev = cache["conv"]
+    else:
+        prev = jnp.zeros((bsz, cw - 1, w), dt)
+    xpad = jnp.concatenate([prev, xb], axis=1)           # (B, S+cw-1, W)
+    conv = sum(xpad[:, i:i + s] * p["conv_w"][i] for i in range(cw))
+    conv = conv + p["conv_b"]
+    new_conv = xpad[:, -(cw - 1):] if cw > 1 else prev
+
+    # RG-LRU gates
+    r = jax.nn.sigmoid(conv @ p["w_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(conv @ p["w_x"]).astype(jnp.float32)
+    # a = exp(-c * 0.01 * softplus(lam) * r): a ~ 0.95 at init (Griffin's
+    # [0.9, 0.999] initialization band)
+    lam_sp = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = -_C * 0.01 * lam_sp * r - 1e-6                 # < 0
+    a2 = jnp.exp(2 * log_a)
+    b = jnp.sqrt(jnp.maximum(1 - a2, 1e-9)) * (i * conv.astype(jnp.float32))
+
+    h0 = (cache["h"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((bsz, w), jnp.float32))
+    if s == 1:
+        h = jnp.exp(log_a[:, 0]) * h0 + b[:, 0]
+        hs = h[:, None]
+        h_last = h
+    else:
+        hs, h_last = chunked_linear_scan(log_a, b, h0)
+
+    out = (hs.astype(dt) * jax.nn.gelu(gate)) @ p["w_out"]
+    new_cache = ({"h": h_last.astype(dt), "conv": new_conv}
+                 if cache is not None else None)
+    return out, new_cache

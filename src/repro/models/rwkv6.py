@@ -1,0 +1,154 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mix with
+data-dependent per-channel decay, plus the RWKV channel mix.
+
+Per head (head_dim = 64), with state S (hd_k x hd_v):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)          (u = "bonus" for current)
+
+w_t = exp(-exp(wx_t)) in (0,1) is data-dependent (LoRA on the shifted input).
+Evaluated in chunks (flash-linear-attention style): decays accumulate as
+exp(cumsum(log w)) so every factor is <= 1 — numerically safe in bf16/f32.
+The chunk algorithm is shared with the Pallas kernel (kernels/rwkv6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flags
+from .config import ModelConfig
+from .nn import Initializer
+from ..runtime import sharding as shd
+
+
+def init_rwkv(ini: Initializer, cfg: ModelConfig):
+    d = cfg.d_model
+    lora = 64
+    for nm in ("r", "k", "v", "g"):
+        ini.param(f"w_{nm}", (d, d), ("embed", "embed"), init="fan_in")
+    ini.param("w_o", (d, d), ("embed", "embed"), init="fan_in")
+    ini.param("mu", (5, d), (None, "embed"), init="uniform", scale=0.5)
+    ini.param("w_decay_a", (d, lora), ("embed", None), init="fan_in")
+    ini.param("w_decay_b", (lora, d), (None, "embed"), init="fan_in")
+    ini.param("decay_base", (d,), ("embed",), init="uniform", scale=1.0)
+    ini.param("bonus", (d,), ("embed",), init="uniform", scale=0.5)
+
+
+def init_rwkv_cm(ini: Initializer, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ini.param("mu_k", (d,), ("embed",), init="uniform", scale=0.5)
+    ini.param("w_k", (d, f), ("embed", "mlp"), init="fan_in")
+    ini.param("w_v", (f, d), ("mlp", "embed"), init="fan_in")
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} with `prev` (B,d) as the t=0 predecessor."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, logw, u, h0, chunk: int = 16):
+    """Chunked WKV recurrence.
+
+    r,k,v: (B,S,H,D); logw: (B,S,H,D) (= log w_t, clipped to [-5, 0)); u: (H,D);
+    h0: (B,H,D,D) initial state. Returns (out (B,S,H,D), hT).
+
+    Stability: the intra-chunk term scales k_j by exp(-cs_j); with
+    |logw| <= 5 and chunk = 16 the exponent is bounded by 80 < log(f32 max).
+    """
+    b, s, h, dd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    rr = r.reshape(b, nc, chunk, h, dd).swapaxes(0, 1)
+    kk = k.reshape(b, nc, chunk, h, dd).swapaxes(0, 1)
+    vv = v.reshape(b, nc, chunk, h, dd).swapaxes(0, 1)
+    lw = logw.reshape(b, nc, chunk, h, dd).swapaxes(0, 1).astype(jnp.float32)
+
+    tri_lo = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly lower
+
+    def body(hstate, inp):
+        rc, kc, vc, lwc = inp                       # (B,C,H,D)
+        cs = jnp.cumsum(lwc, axis=1)                # cumulative log decay
+        # inclusive-of-current decay products: P_i = exp(cs_i)
+        p_i = jnp.exp(cs)
+        # inter-chunk: out_i += (r_i * P_i / w_i) @ S_prev  (state predates
+        # token i, so decay through tokens 1..i-1 = exp(cs_i - lw_i))
+        decay_to_i = jnp.exp(cs - lwc)
+        r_dec = (rc.astype(jnp.float32) * decay_to_i)
+        inter = jnp.einsum("bchd,bhde->bche", r_dec, hstate)
+        # intra-chunk: j < i term with decay exp(cs_{i-1} - cs_j) = product of
+        # w over (j, i-1]; plus the u-bonus diagonal for j == i
+        k_scaled = kc.astype(jnp.float32) * jnp.exp(-cs)
+        att = jnp.einsum("bchd,bjhd->bhcj", r_dec, k_scaled)
+        att = jnp.where(tri_lo[None, None], att, 0.0)
+        diag = jnp.einsum("bchd,bchd->bch",
+                          rc.astype(jnp.float32) * u,
+                          kc.astype(jnp.float32))
+        intra = jnp.einsum("bhcj,bjhe->bche", att, vc.astype(jnp.float32))
+        intra = intra + diag[..., None] * vc.astype(jnp.float32)
+        # state update: S' = diag(exp(cs_C)) S + sum_j exp(cs_C - cs_j) k_j v_j
+        total = cs[:, -1][:, None]                  # (B,1,H,D)
+        k_dec = kc.astype(jnp.float32) * jnp.exp(total - cs)
+        upd = jnp.einsum("bchd,bche->bhde", k_dec, vc.astype(jnp.float32))
+        h_new = jnp.exp(total[:, 0])[..., None] * hstate + upd
+        return h_new, inter + intra
+
+    if flags.unroll_scans():
+        state = h0.astype(jnp.float32)
+        outs = []
+        for c in range(nc):
+            state, o = body(state, (rr[c], kk[c], vv[c], lw[c]))
+            outs.append(o)
+        out = jnp.stack(outs, 0).swapaxes(0, 1).reshape(b, s, h, dd)
+        return out.astype(r.dtype), state
+    hT, outs = jax.lax.scan(body, h0.astype(jnp.float32), (rr, kk, vv, lw))
+    out = outs.swapaxes(0, 1).reshape(b, s, h, dd)
+    return out.astype(r.dtype), hT
+
+
+def rwkv_time_mix(p, cfg: ModelConfig, x, *, cache=None):
+    """x (B,S,d) -> (out, new_cache). cache = {'shift': (B,d), 'S': (B,H,D,D)}."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    prev = cache["shift"] if cache is not None else jnp.zeros((b, d), x.dtype)
+    xs = _shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + mu[i] * (xs - x) for i in range(5))
+    r = (xr @ p["w_r"]).reshape(b, s, nh, hd)
+    k = (xk @ p["w_k"]).reshape(b, s, nh, hd)
+    v = (xv @ p["w_v"]).reshape(b, s, nh, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+    # data-dependent decay, log w <= 0 by construction
+    wx = p["decay_base"].astype(jnp.float32) \
+        + ((xw @ p["w_decay_a"]) @ p["w_decay_b"]).astype(jnp.float32)
+    # clip so log w in [-5, 0): keeps the chunked evaluation overflow-free
+    logw = -jnp.clip(jnp.exp(jnp.clip(wx, -10.0, 1.6)), 1e-6, 5.0)
+    logw = logw.reshape(b, s, nh, hd)
+    u = p["bonus"].astype(jnp.float32).reshape(nh, hd)
+
+    h0 = (cache["S"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((b, nh, hd, hd), jnp.float32))
+    # the recurrence is ~0.4% of block FLOPs: keep it sequence-replicated
+    # (see DESIGN.md) and shard the surrounding matmuls
+    out, hT = wkv_chunked(r, k, v, logw, u, h0)
+    out = out.reshape(b, s, d) * g
+    out = shd.constrain(out, ("batch", "seq", "embed"))
+    out = out @ p["w_o"]
+    new_cache = ({"shift": x[:, -1], "S": hT.astype(x.dtype)}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def rwkv_channel_mix(p, cfg: ModelConfig, x, *, cache=None):
+    b, s, d = x.shape
+    prev = cache["shift"] if cache is not None else jnp.zeros((b, d), x.dtype)
+    xs = _shift(x, prev)
+    xk = x + p["mu_k"].astype(x.dtype) * (xs - x)
+    h = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    h = shd.constrain(h, ("batch", "seq", "mlp"))
+    out = h @ p["w_v"]
+    new_cache = {"shift": x[:, -1]} if cache is not None else None
+    return out, new_cache

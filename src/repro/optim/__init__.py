@@ -1,0 +1,2 @@
+"""Optimizers, LR schedules and gradient transforms."""
+from . import adamw  # noqa: F401

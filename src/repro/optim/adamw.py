@@ -1,0 +1,136 @@
+"""AdamW with mixed precision + ZeRO-style state sharding.
+
+Params are kept in `param_dtype` (bf16 on TPU); the optimizer holds fp32
+master weights and moments. State sharding specs are derived per-parameter:
+start from the parameter's own (TP) spec and shard the largest remaining
+replicated dim over the data(+pod) axes — classic ZeRO-1/3 layout. XLA's
+reduce-scatter-creator then turns grad all-reduce + slice into reduce-scatter.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: Any      # fp32 copy of params
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    # copy=True: master must never alias the (donated) bf16/f32 params
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.int32(0),
+                      master=jax.tree.map(f32, params),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def init_shapes(param_shapes) -> AdamWState:
+    """eval_shape-compatible state construction from ShapeDtypeStructs."""
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      master=jax.tree.map(f32, param_shapes),
+                      m=jax.tree.map(f32, param_shapes),
+                      v=jax.tree.map(f32, param_shapes))
+
+
+def global_norm(grads) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply(cfg: AdamWConfig, state: AdamWState, grads, lr_scale=1.0,
+          param_dtype=jnp.bfloat16):
+    """Returns (new_params, new_state, grad_norm). Decoupled weight decay;
+    norms/scalars (ndim < 2) are excluded from decay."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m_new / b1c
+        vh = v_new / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if w.ndim >= 2:
+            delta = delta + cfg.weight_decay * w
+        w_new = w - lr * delta
+        return w_new, m_new, v_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_w = tdef.flatten_up_to(state.master)
+    out = [upd(g, m, v, w) for g, m, v, w in
+           zip(flat_g, flat_m, flat_v, flat_w)]
+    new_master = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda w: w.astype(param_dtype), new_master)
+    return new_params, AdamWState(step, new_master, new_m, new_v), gnorm
+
+
+# ---- ZeRO sharding specs -------------------------------------------------------
+def zero_spec(param_spec, shape, mesh, zero_axes=("pod", "data")):
+    """Extend a parameter's PartitionSpec by sharding the largest replicated
+    dim over the data-parallel axes (ZeRO). Falls back to the param spec when
+    nothing divides."""
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+    avail = [a for a in zero_axes if a in mesh.shape]
+    if not avail:
+        return param_spec
+    zsize = int(np.prod([mesh.shape[a] for a in avail]))
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = set()
+    for e in entries:
+        if e is None:
+            continue
+        used.update(e if isinstance(e, tuple) else (e,))
+    if any(a in used for a in avail):
+        return param_spec
+    # choose the largest divisible replicated dim
+    best, best_size = -1, 0
+    for i, e in enumerate(entries):
+        if e is None and shape[i] % zsize == 0 and shape[i] > best_size:
+            best, best_size = i, shape[i]
+    if best < 0:
+        return param_spec
+    entries[best] = tuple(avail) if len(avail) > 1 else avail[0]
+    return P(*entries)
+
+
+def state_shardings(param_specs, param_shapes, mesh):
+    """NamedSharding tree for AdamWState given parameter specs/shapes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def zs(spec, shape):
+        return NamedSharding(mesh, zero_spec(spec, shape.shape, mesh))
+
+    master = jax.tree.map(zs, param_specs, param_shapes)
+    return AdamWState(step=NamedSharding(mesh, P()),
+                      master=master,
+                      m=jax.tree.map(lambda s: s, master),
+                      v=jax.tree.map(lambda s: s, master))

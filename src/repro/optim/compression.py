@@ -1,0 +1,68 @@
+"""Error-feedback int8 gradient compression for the cross-pod reduce.
+
+On the multi-pod mesh the `pod` axis crosses the slow DCN/ICI-bridge links,
+so the gradient reduce over `pod` is the costliest collective per step.
+`ef_allreduce` implements a compressed all-reduce as
+reduce-scatter(int8) + all-gather(int8):
+
+  1. shard the tensor along the pod axis (each pod owns 1/P of it),
+  2. all_to_all int8-quantized shards (per-shard fp32 scale),
+  3. local fp32 sum of the dequantized shards,
+  4. all_gather the int8-quantized result.
+
+Wire bytes drop ~4x vs fp32 (~2x vs bf16). The quantization error is kept in
+an error-feedback accumulator added back before the next quantization, which
+preserves convergence (Karimireddy et al. 2019). Used inside shard_map over
+the 'pod' axis; see tests/test_compression.py for the multi-device check.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_allreduce(x: jnp.ndarray, err: jnp.ndarray, axis_name: str):
+    """Mean-all-reduce of `x` over `axis_name` with int8 wire format and
+    error feedback. x: any shape with leading dim divisible by the axis
+    size. Returns (reduced, new_err)."""
+    n = jax.lax.axis_size(axis_name)
+    y = x + err
+    lead = y.shape[0]
+    assert lead % n == 0, (lead, n)
+    shards = y.reshape((n, lead // n) + y.shape[1:])
+
+    # per-shard quantization; errors accounted against our own contribution
+    q, scale = jax.vmap(quantize_int8)(shards)
+    new_err = y - dequantize_int8(
+        q, scale.reshape((n,) + (1,) * (q.ndim - 1))).reshape(y.shape)
+
+    # reduce-scatter phase: everyone receives the shard it owns from all
+    q_t = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
+    s_t = jax.lax.all_to_all(scale, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
+    # q_t: (n, shard...) = everyone's contribution to MY shard
+    local_sum = jnp.sum(
+        dequantize_int8(q_t, s_t.reshape((n,) + (1,) * (q_t.ndim - 1))),
+        axis=0) / n
+
+    # all-gather phase (int8 again)
+    q2, s2 = quantize_int8(local_sum)
+    qg = jax.lax.all_gather(q2, axis_name)          # (n, shard...)
+    sg = jax.lax.all_gather(s2, axis_name)
+    full = dequantize_int8(
+        qg, sg.reshape((n,) + (1,) * (qg.ndim - 1))).reshape(y.shape)
+    return full, new_err

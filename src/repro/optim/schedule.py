@@ -1,0 +1,13 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import math
+
+
+def warmup_cosine(step: int, *, peak: float = 1.0, warmup: int = 100,
+                  total: int = 10_000, floor: float = 0.1) -> float:
+    """Returns an lr *scale* in [floor*peak, peak] (multiply into AdamW.lr)."""
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = min(max((step - warmup) / max(total - warmup, 1), 0.0), 1.0)
+    return peak * (floor + (1 - floor) * 0.5 * (1 + math.cos(math.pi * frac)))

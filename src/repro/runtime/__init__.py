@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, train/serve steps, BFC-scheduled
+pipeline parallelism, fault tolerance, serving admission control."""

@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Models annotate parameters and activations with *logical* axes
+('embed', 'heads', 'mlp', 'vocab', 'batch', 'seq', ...). A `Rules` object maps
+logical axes to physical mesh axes per architecture; `constrain()` applies
+`with_sharding_constraint` when a mesh is active and is a no-op otherwise, so
+the same model code runs on 1 CPU device and on the 512-chip dry-run mesh.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def _divides(mesh: Mesh, axis, dim: int) -> bool:
+    if axis is None:
+        return True
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    size = int(np.prod([mesh.shape[a] for a in names]))
+    return dim % size == 0
+
+
+class Rules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+
+    def __init__(self, table: Dict[str, object], strict_divisibility=True):
+        self.table = dict(table)
+        self.strict = strict_divisibility
+
+    def spec(self, axes: Tuple, shape: Optional[Tuple[int, ...]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+        out = []
+        used = set()
+        for i, a in enumerate(axes):
+            m = self.table.get(a) if a is not None else None
+            # drop mesh axes that don't exist on this mesh (e.g. 'pod' on the
+            # single-pod mesh)
+            if m is not None and mesh is not None:
+                names = (m,) if isinstance(m, str) else tuple(m)
+                names = tuple(n for n in names if n in mesh.shape)
+                m = (names[0] if len(names) == 1 else names) if names else None
+            # one mesh axis may appear at most once in a spec
+            key = tuple(m) if isinstance(m, (list, tuple)) else (m,)
+            if m is not None and any(k in used for k in key):
+                m = None
+            # drop the mapping if it does not divide the dim (GSPMD would pad;
+            # we prefer explicit replication unless the rule insists)
+            if (m is not None and shape is not None and self.strict
+                    and mesh is not None and not _divides(mesh, m, shape[i])):
+                m = None
+            if m is not None:
+                used.update(key)
+            out.append(m)
+        return P(*out)
+
+    def sharding(self, axes: Tuple, shape, mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(axes, shape, mesh))
+
+
+# ---- activation constraint context -------------------------------------------
+def set_rules(rules: Optional[Rules], mesh: Optional[Mesh]):
+    _ctx.rules = rules
+    _ctx.mesh = mesh
+
+
+def get_rules():
+    return getattr(_ctx, "rules", None), getattr(_ctx, "mesh", None)
+
+
+class use_rules:
+    def __init__(self, rules: Rules, mesh: Mesh):
+        self.pair = (rules, mesh)
+
+    def __enter__(self):
+        self.prev = get_rules()
+        set_rules(*self.pair)
+        return self
+
+    def __exit__(self, *exc):
+        set_rules(*self.prev)
+        return False
+
+
+def constrain(x, axes: Tuple):
+    """Apply a sharding constraint to an activation if a mesh is active."""
+    rules, mesh = get_rules()
+    if rules is None or mesh is None:
+        return x
+    spec = rules.spec(axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---- per-architecture rule tables ---------------------------------------------
+def rules_for(cfg, mode: str = "train") -> Rules:
+    """Sharding profile per architecture (see DESIGN.md §5/§6).
+
+    'heads' mode: Megatron-style TP — q-heads and mlp sharded on `model`,
+    kv heads replicated (n_kv < 16 everywhere), batch on `data` (+`pod`).
+    'sp' mode: sequence parallelism — activations sharded on `seq`, weights
+    on `mlp`/`vocab`; used when head counts don't divide the model axis.
+
+    mode='decode': flash-decoding layout — the KV cache is sharded on its
+    *sequence* dim over `model` (the dominant state at 32k-512k contexts)
+    and q-heads are replicated for the single-token attention; GSPMD turns
+    the masked softmax reductions into partial-max/sum psums (the LSE merge).
+    Projections stay TP-sharded; the tiny (B,1,...) activation reshards are
+    negligible.
+    """
+    base = {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv": None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": None,
+        "layers": None,
+        "rnn": "model",
+        "kv_seq": None,
+        "frontend": None,
+        # heads axis of attention *activations*; defaults to the weights'
+        # mapping, overridden at decode (see below)
+        "attn_act_heads": "model",
+    }
+    if getattr(cfg, "moe_mode", "tp") == "ep":
+        # expert parallelism: the expert dim takes the model axis; the rules
+        # engine automatically drops 'mlp'->model on expert weight tensors
+        # (one mesh axis per spec), so expert ff stays local
+        base["expert"] = "model"
+    mode_attn = getattr(cfg, "attn_sharding", "heads")
+    if mode_attn == "sp":
+        base.update({"heads": None, "seq": "model", "kv_seq": "model"})
+    elif mode_attn == "dp":
+        # replicated-sequence data parallelism + ff-TP: attention (small
+        # heads) computes fully locally; only the MLP row-parallel psum
+        # crosses chips. Wins for small-d archs where SP's seq-dim dynamic
+        # slices force GSPMD to all-gather Q/K/V per chunk (§Perf R6).
+        base.update({"heads": None, "seq": None, "kv_seq": None})
+    if mode == "decode":
+        # weights stay heads-sharded (they dominate decode memory);
+        # the single-token q/out activations are explicitly gathered in
+        # attention_block (~2 MB) so the cache can stay kv_seq-sharded
+        base.update({"seq": None, "kv_seq": "model",
+                     "attn_act_heads": None})
+    return Rules(base)
+
+
+def make_in_shardings(params_axes, params_shapes, rules: Rules, mesh: Mesh):
+    """NamedSharding tree for parameters from their logical axes."""
+    return jax.tree.map(
+        lambda ax, shape: rules.sharding(ax, shape, mesh),
+        params_axes, params_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

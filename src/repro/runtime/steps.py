@@ -1,0 +1,195 @@
+"""Train / prefill / decode step builders + ShapeDtypeStruct input specs.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the train/serve drivers execute. Distribution is pure GSPMD: the
+steps are mesh-agnostic; `in_shardings` (params/opt/batch/cache) carry the
+placement, and activation constraints come from `runtime.sharding` rules.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model
+from ..models.config import ModelConfig
+from ..optim import adamw
+from ..configs.shapes import ShapeSpec
+from . import sharding as shd
+
+
+@dataclass(frozen=True)
+class StepSettings:
+    accum: int = 1            # gradient-accumulation microbatches
+    scan_groups: int = 0      # two-level remat grouping of layer units
+    aux_weight: float = 0.01  # MoE load-balance loss weight
+    remat: bool = True
+    probe: bool = False       # roofline probe: unroll every scan (see
+                              # models.flags) so cost_analysis is exact
+
+
+# ---- input specs ---------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if cfg.frontend != "none":
+            specs["extra_embeds"] = sds((b, cfg.frontend_tokens, cfg.d_model),
+                                        cfg.compute_dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((b, s), i32)}
+        if cfg.frontend != "none":
+            specs["extra_embeds"] = sds((b, cfg.frontend_tokens, cfg.d_model),
+                                        cfg.compute_dtype)
+        return specs
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: model.init_cache(cfg, b, s, stacked=False))
+        return {"tokens": sds((b, 1), i32), "cache": cache,
+                "kv_len": sds((b,), i32)}
+    raise ValueError(shape.kind)
+
+
+# ---- train ---------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    st: StepSettings = StepSettings(),
+                    grad_constraint=None):
+    """grad_constraint: optional tree->tree fn applying ZeRO sharding
+    constraints to the gradient accumulator (built by the launcher, which
+    knows mesh + axes)."""
+    gc = grad_constraint or (lambda t: t)
+    def loss_fn(params, tokens, labels, extra):
+        hidden, _, aux = model.backbone(
+            params, cfg, tokens, extra_embeds=extra, remat=st.remat,
+            scan_groups=st.scan_groups, unroll_units=st.probe)
+        ce = model.lm_loss(params, cfg, hidden, labels, unroll=st.probe)
+        return ce + st.aux_weight * aux.astype(jnp.float32), ce
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = batch.get("extra_embeds")
+        if st.accum <= 1:
+            (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, tokens, labels, extra)
+            grads = gc(jax.tree.map(lambda x: x.astype(jnp.float32), grads))
+        else:
+            a = st.accum
+            b = tokens.shape[0]
+            assert b % a == 0
+            mb = b // a
+            tok_r = tokens.reshape(a, mb, -1)
+            lab_r = labels.reshape(a, mb, -1)
+            ex_r = (extra.reshape(a, mb, *extra.shape[1:])
+                    if extra is not None else None)
+
+            def micro(carry, i):
+                g_acc, l_acc, c_acc = carry
+                ex_i = ex_r[i] if ex_r is not None else None
+                (l, c), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, tok_r[i], lab_r[i], ex_i)
+                # ZeRO-constrain the per-microbatch grads BEFORE the add so
+                # XLA reduce-scatters them instead of materializing the full
+                # replicated fp32 tree
+                g = gc(jax.tree.map(lambda x: x.astype(jnp.float32), g))
+                g = jax.tree.map(lambda x, acc: acc + x, g, g_acc)
+                return (g, l_acc + l, c_acc + c), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            g0 = gc(g0)
+            (grads, loss, ce), _ = jax.lax.scan(
+                micro, (g0, jnp.float32(0), jnp.float32(0)), jnp.arange(a))
+            grads = jax.tree.map(lambda g: g / a, grads)
+            loss, ce = loss / a, ce / a
+        new_params, new_opt, gnorm = adamw.apply(
+            opt_cfg, opt_state, grads, param_dtype=cfg.param_dtype)
+        metrics = {"loss": loss, "ce": ce, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ---- serving -------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, probe: bool = False):
+    def prefill_step(params, tokens, extra_embeds=None):
+        b, s = tokens.shape
+        cache = model.init_cache(cfg, b, s)
+        hidden, cache, _ = model.backbone(
+            params, cfg, tokens, extra_embeds=extra_embeds, cache=cache,
+            kv_len=jnp.int32(s), remat=False, unroll_units=probe)
+        logits = model.logits_for(params, cfg, hidden[:, -1:])
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, probe: bool = False):
+    def serve_step(params, cache, tokens, kv_len):
+        """One new token per sequence against a kv_len-deep cache.
+        Units are always unrolled at decode: no scan dispatch latency and the
+        per-layer cache slices alias in place."""
+        hidden, cache, _ = model.backbone(
+            params, cfg, tokens, cache=cache, kv_len=kv_len + 1, remat=False,
+            unroll_units=True)
+        logits = model.logits_for(params, cfg, hidden)
+        return logits, cache
+
+    return serve_step
+
+
+# ---- sharded entry points -------------------------------------------------------
+def batch_sharding(mesh, rules: shd.Rules):
+    from jax.sharding import NamedSharding
+    return lambda axes, shape: NamedSharding(
+        mesh, rules.spec(axes, shape, mesh))
+
+
+def specs_for_batch(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    rules: shd.Rules):
+    """NamedSharding tree matching input_specs(cfg, shape)."""
+    from jax.sharding import NamedSharding
+    mk = lambda axes, shp: NamedSharding(mesh, rules.spec(axes, shp, mesh))
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = mk(("batch", "seq"), v.shape)
+        elif k == "extra_embeds":
+            out[k] = mk(("batch", None, "embed"), v.shape)
+        elif k == "kv_len":
+            out[k] = mk(("batch",), v.shape)
+        elif k == "cache":
+            cax = model.cache_axes(cfg, stacked=not isinstance(
+                v.get("units"), list))
+            out[k] = jax.tree.map(
+                lambda ax, s: mk(ax, s.shape), cax, v,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x))
+        else:
+            raise KeyError(k)
+    return out
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules: shd.Rules):
+    shapes, axes = model.model_shapes(cfg)
+    mk = lambda ax, s: rules.sharding(tuple(ax), s.shape, mesh)
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    pshard = jax.tree.map(mk, axes, shapes, is_leaf=is_ax)
+    return shapes, axes, pshard
+
+
+def opt_shardings(cfg: ModelConfig, mesh, rules: shd.Rules):
+    shapes, axes, pshard = param_shardings(cfg, mesh, rules)
+    pspecs = jax.tree.map(lambda s: s.spec, pshard)
+    ostate_shapes = adamw.init_shapes(shapes)
+    oshard = adamw.state_shardings(pspecs, shapes, mesh)
+    return shapes, axes, pshard, ostate_shapes, oshard

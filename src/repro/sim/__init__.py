@@ -1,0 +1,2 @@
+"""Packet-level network simulator: the paper's evaluation substrate in JAX."""
+from . import config, engine, metrics, topology, workload  # noqa: F401

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see the real single CPU device (the 512-device override is only
+# ever set inside launch/dryrun.py). Keep jax quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,50 @@
+"""Properties of the BFC control law (§3.3.2)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.backpressure import (BackpressureParams, pause_threshold,
+                                     should_pause, should_resume,
+                                     worst_case_buffer)
+
+P = BackpressureParams(hrtt=25, tau=12, mu=1.0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 512))
+def test_threshold_monotone_in_active(n):
+    """More active queues -> equal or smaller per-queue threshold."""
+    t1 = int(pause_threshold(P, n))
+    t2 = int(pause_threshold(P, n + 1))
+    assert t2 <= t1
+    assert t1 >= 1
+
+
+def test_threshold_values():
+    # (25 + 12) * 1 / N
+    assert int(pause_threshold(P, 1)) == 37
+    assert int(pause_threshold(P, 4)) == 10
+    assert int(pause_threshold(P, 64)) == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 200), st.integers(1, 64))
+def test_pause_resume_consistency(qlen, n):
+    th = pause_threshold(P, n)
+    # a queue is never simultaneously pause-worthy and resume-worthy
+    assert not (bool(should_pause(qlen, th)) and bool(should_resume(qlen, th)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 64))
+def test_worst_case_buffer_bound(n):
+    """Th + (HRTT+tau)*mu — the paper's per-queue bound (~2 one-hop BDPs
+    when N_active = 1, Fig. 20)."""
+    wc = int(worst_case_buffer(P, n))
+    assert wc <= int(pause_threshold(P, 1)) + 37
+    assert wc >= int(pause_threshold(P, n))
+
+
+def test_scales_with_rate():
+    fast = BackpressureParams(hrtt=25, tau=12, mu=2.0)
+    assert int(pause_threshold(fast, 1)) == 2 * int(pause_threshold(P, 1))

@@ -1,0 +1,57 @@
+"""Data pipeline: determinism, resume, BFC-bounded prefetch."""
+import time
+
+import numpy as np
+
+from repro.data.pipeline import BackpressureQueue, batches
+from repro.data.tokens import SyntheticCorpus
+
+
+def test_corpus_deterministic_and_seekable():
+    c = SyntheticCorpus(vocab=128, seed=3)
+    a1, b1 = c.batch(5, 4, 16)
+    a2, b2 = c.batch(5, 4, 16)
+    np.testing.assert_array_equal(a1, a2)
+    # labels are next tokens
+    np.testing.assert_array_equal(a1[:, 1:], b1[:, :-1])
+    # different steps differ
+    a3, _ = c.batch(6, 4, 16)
+    assert not np.array_equal(a1, a3)
+
+
+def test_corpus_learnable_structure():
+    """Next token is mostly a deterministic fn of the previous token."""
+    c = SyntheticCorpus(vocab=64, seed=1)
+    seq = c.sequence(0, 400)
+    hits = 0.0
+    for a in range(1, 64):
+        pred = (a * seq[:-1].astype(np.int64) + 7) % 64
+        hits = max(hits, float((pred == seq[1:]).mean()))
+    assert hits > 0.8
+
+
+def test_prefetch_resume_equivalence():
+    c = SyntheticCorpus(vocab=64, seed=2)
+    q = batches(c, 2, 8, start_step=0)
+    first = [q.get() for _ in range(6)]
+    q.close()
+    q2 = batches(c, 2, 8, start_step=3)
+    resumed = [q2.get() for _ in range(3)]
+    q2.close()
+    for (a, b), (a2, b2) in zip(first[3:], resumed):
+        np.testing.assert_array_equal(a, a2)
+        np.testing.assert_array_equal(b, b2)
+
+
+def test_backpressure_bounds_queue():
+    """A producer much faster than the consumer must stay near the BFC
+    threshold rather than filling the capacity."""
+    q = BackpressureQueue(lambda i: i, hrtt_s=0.01, capacity=1000)
+    time.sleep(0.5)          # producer free-runs; consumer idle
+    depth = q.depth
+    # threshold = (hrtt + tau) * mu; drain ema starts at 0.1/s -> tiny
+    assert depth < 50, depth
+    assert q.pauses > 0
+    got = [q.get() for _ in range(depth)]
+    assert got == list(range(depth))
+    q.close()

@@ -1,0 +1,141 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.rglru import ops as lru_ops, ref as lru_ref
+from repro.kernels.rwkv6 import ops as wkv_ops, ref as wkv_ref
+from repro.kernels.bfc_step import ops as bfc_ops, ref as bfc_ref
+
+
+# ---- flash attention -------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kh,s,t,hd,causal,window,dtype", [
+    (2, 4, 2, 128, 128, 64, True, 0, jnp.float32),
+    (1, 4, 1, 256, 256, 64, True, 64, jnp.float32),
+    (2, 2, 2, 128, 128, 32, False, 0, jnp.float32),
+    (1, 8, 4, 128, 256, 64, False, 0, jnp.float32),   # cross, T != S
+    (1, 2, 2, 128, 128, 64, True, 0, jnp.bfloat16),
+])
+def test_flash_attention_matches_ref(b, h, kh, s, t, hd, causal, window,
+                                     dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kh, t, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kh, t, hd), dtype)
+    o_ref = fa_ref.attention_ref(q, k, v, causal=causal, window=window)
+    o_pal = fa_ops.attend(q, k, v, causal=causal, window=window,
+                          impl="interpret", block_q=64, block_k=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_block_shape_sweep():
+    q = jax.random.normal(jax.random.key(1), (1, 2, 256, 64))
+    k = jax.random.normal(jax.random.key(2), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.key(3), (1, 2, 256, 64))
+    o_ref = fa_ref.attention_ref(q, k, v, causal=True)
+    for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        o = fa_ops.attend(q, k, v, causal=True, impl="interpret",
+                          block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---- RG-LRU ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,w,chunk", [
+    (2, 128, 128, 32), (1, 256, 256, 64), (3, 64, 128, 64),
+    (1, 128, 384, 128),
+])
+def test_rglru_matches_ref(b, s, w, chunk):
+    ks = jax.random.split(jax.random.key(4), 3)
+    log_a = -jnp.abs(jax.random.normal(ks[0], (b, s, w))) * 0.1
+    bb = jax.random.normal(ks[1], (b, s, w))
+    h0 = jax.random.normal(ks[2], (b, w))
+    r_all, r_T = lru_ref.rglru_scan_ref(log_a, bb, h0)
+    p_all, p_T = lru_ops.scan(log_a, bb, h0, impl="interpret", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(p_all), np.asarray(r_all),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(p_T), np.asarray(r_T),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---- RWKV6 -----------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,d,chunk", [
+    (2, 64, 2, 64, 16), (1, 128, 4, 32, 16), (2, 32, 1, 64, 8),
+])
+def test_wkv6_matches_ref(b, s, h, d, chunk):
+    ks = jax.random.split(jax.random.key(5), 6)
+    r = jax.random.normal(ks[0], (b, s, h, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, d)) * 0.5
+    logw = -jnp.clip(jnp.exp(jax.random.normal(ks[3], (b, s, h, d))),
+                     1e-3, 5.0)
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    h0 = jax.random.normal(ks[5], (b, h, d, d)) * 0.2
+    o_ref, hT_ref = wkv_ref.wkv_ref(r, k, v, logw, u, h0)
+    o_pal, hT_pal = wkv_ops.wkv6(r, k, v, logw, u, h0, impl="interpret",
+                                 chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT_pal), np.asarray(hT_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_wkv6_chunked_model_formulation_matches_sequential():
+    """The model's jnp chunked evaluation is the same math as the kernel."""
+    from repro.models.rwkv6 import wkv_chunked
+    ks = jax.random.split(jax.random.key(6), 6)
+    b, s, h, d = 2, 48, 2, 32
+    r = jax.random.normal(ks[0], (b, s, h, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, d)) * 0.5
+    logw = -jnp.clip(jnp.exp(jax.random.normal(ks[3], (b, s, h, d))),
+                     1e-3, 5.0)
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    h0 = jax.random.normal(ks[5], (b, h, d, d)) * 0.2
+    o_ref, hT_ref = wkv_ref.wkv_ref(r, k, v, logw, u, h0)
+    o_m, hT_m = wkv_chunked(r, k, v, logw, u, h0, chunk=16)
+    np.testing.assert_allclose(np.asarray(o_m, np.float32),
+                               np.asarray(o_ref), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT_m), np.asarray(hT_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ---- BFC switch step --------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(128, 8), (256, 32)]),
+       st.integers(1, 64))
+def test_bfc_step_matches_ref(seed, pq, pw):
+    p, q = pq
+    ks = jax.random.split(jax.random.key(seed), 3)
+    occ = jax.random.randint(ks[0], (p, q), 0, 60)
+    qpaused = jax.random.bernoulli(ks[1], 0.25, (p, q))
+    ptr = jax.random.randint(ks[2], (p,), 0, q)
+    a = bfc_ref.bfc_decide_ref(occ, qpaused, ptr, pause_window=pw)
+    b = bfc_ops.decide(occ, qpaused, ptr, pause_window=pw,
+                       impl="interpret", block_p=128)
+    for x, y, nm in zip(a, b, ("nact", "th", "pause", "sel")):
+        assert bool(jnp.all(x == y)), nm
+
+
+def test_bfc_step_selected_queue_is_eligible():
+    ks = jax.random.split(jax.random.key(9), 3)
+    occ = jax.random.randint(ks[0], (64, 16), 0, 5)
+    qpaused = jax.random.bernoulli(ks[1], 0.5, (64, 16))
+    ptr = jax.random.randint(ks[2], (64,), 0, 16)
+    nact, th, pause, sel = bfc_ref.bfc_decide_ref(occ, qpaused, ptr,
+                                                  pause_window=37)
+    sel = np.asarray(sel)
+    occ = np.asarray(occ)
+    qp = np.asarray(qpaused)
+    for p in range(64):
+        if sel[p] >= 0:
+            assert occ[p, sel[p]] > 0 and not qp[p, sel[p]]
+        else:
+            assert not ((occ[p] > 0) & ~qp[p]).any()

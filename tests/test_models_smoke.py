@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs one
+forward + one train step on CPU, asserting output shapes and finiteness.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model, nn
+from repro.optim import adamw
+from repro.runtime import steps as steps_mod
+
+ARCHS = list(configs.ARCHS)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_smoke(name):
+    cfg = configs.reduced(name)
+    params, axes = model.init_model(jax.random.key(0), cfg)
+    assert nn.count_params(params) > 0
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab)
+    extra = (jnp.full((2, cfg.frontend_tokens, cfg.d_model), 0.01,
+                      cfg.compute_dtype)
+             if cfg.frontend != "none" else None)
+    h, cache, aux = model.backbone(params, cfg, toks, extra_embeds=extra)
+    assert h.shape == (2, 32, cfg.d_model)
+    assert not bool(jnp.isnan(h).any())
+    assert cache is None
+    loss = model.lm_loss(params, cfg, h, toks, chunk=32)
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_smoke(name):
+    cfg = configs.reduced(name)
+    params, _ = model.init_model(jax.random.key(0), cfg)
+    opt = adamw.init(params)
+    step = jax.jit(steps_mod.make_train_step(
+        cfg, adamw.AdamWConfig(lr=1e-3), steps_mod.StepSettings(accum=2)))
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(2), (4, 32), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(jax.random.key(3), (4, 32), 0,
+                                     cfg.vocab),
+    }
+    if cfg.frontend != "none":
+        batch["extra_embeds"] = jnp.full(
+            (4, cfg.frontend_tokens, cfg.d_model), 0.01, cfg.compute_dtype)
+    p2, o2, m = step(params, opt, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    # params actually changed
+    l0 = jax.tree.leaves(p2)[0]
+    assert l0.dtype == cfg.param_dtype
+
+
+@pytest.mark.parametrize("name", ["phi3-mini-3.8b", "gemma3-1b",
+                                  "recurrentgemma-2b", "rwkv6-3b",
+                                  "granite-moe-1b-a400m"])
+def test_decode_matches_full_context(name):
+    """Incremental decode (prefill + serve_step) must reproduce the full
+    forward's logits for the same token stream."""
+    cfg = configs.reduced(name)
+    params, _ = model.init_model(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(5), (2, 16), 0, cfg.vocab)
+
+    h_full, _, _ = model.backbone(params, cfg, toks)
+    logits_full = model.logits_for(params, cfg, h_full)
+
+    decode = steps_mod.make_decode_step(cfg)
+    cache = model.init_cache(cfg, 2, 32)
+    logits_inc = []
+    for i in range(16):
+        kv = jnp.full((2,), i, jnp.int32)
+        lg, cache = decode(params, cache, toks[:, i:i + 1], kv)
+        logits_inc.append(lg[:, 0])
+    logits_inc = jnp.stack(logits_inc, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_inc),
+                               np.asarray(logits_full),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("name", ["phi3-mini-3.8b", "musicgen-medium"])
+def test_prefill_then_decode(name):
+    cfg = configs.reduced(name)
+    params, _ = model.init_model(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(6), (2, 8), 0, cfg.vocab)
+    prefill = steps_mod.make_prefill_step(cfg)
+    logits, cache = prefill(params, toks)
+    assert logits.shape == (2, 1, cfg.vocab)
+    h_full, _, _ = model.backbone(params, cfg, toks)
+    lf = model.logits_for(params, cfg, h_full[:, -1:])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(lf),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_gqa_grouping():
+    """GQA must attend q-head groups to their own kv head."""
+    from repro.models.attention import naive_attention
+    b, s, hd = 1, 8, 16
+    q = jnp.zeros((b, s, 4, hd)).at[:, :, 0, :].set(1.0)
+    k = jax.random.normal(jax.random.key(0), (b, s, 2, hd))
+    v = jnp.concatenate([jnp.ones((b, s, 1, hd)),
+                         jnp.zeros((b, s, 1, hd))], axis=2)
+    out = naive_attention(q, k, v, causal=True)
+    # heads 0,1 -> kv head 0 (v=1); heads 2,3 -> kv head 1 (v=0)
+    assert bool(jnp.allclose(out[:, :, 0], 1.0, atol=1e-5))
+    assert bool(jnp.allclose(out[:, :, 2], 0.0, atol=1e-5))
+
+
+def test_param_counts_match_nameplates():
+    expected = {
+        "granite-moe-1b-a400m": (1.3e9, 1.5e9),
+        "grok-1-314b": (3.0e11, 3.3e11),
+        "phi3-mini-3.8b": (3.5e9, 4.0e9),
+        "deepseek-67b": (6.5e10, 7.0e10),
+        "starcoder2-15b": (1.5e10, 1.65e10),
+        "gemma3-1b": (0.9e9, 1.1e9),
+        "rwkv6-3b": (2.5e9, 3.1e9),
+    }
+    for name, (lo, hi) in expected.items():
+        shapes, _ = model.model_shapes(configs.get(name))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+        assert lo <= n <= hi, (name, n)

@@ -1,0 +1,66 @@
+"""Roofline extraction: HLO collective parsing + cost semantics."""
+import numpy as np
+
+from repro.launch import roofline
+
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+ENTRY %main {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %ag = f32[16,16384]{1,0} all-gather(%p0), dimensions={1}
+  %ar = bf16[4096]{0} all-reduce(%x), to_apply=%add
+  %ars = bf16[512]{0} all-reduce-start(%y)
+  %rs = f32[2,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%q, %r)
+  %cp = u8[100]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[16,16]{1,0} dot(%p0, %p0)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    got = roofline.collective_bytes(HLO_SAMPLE)
+    assert got["all-gather"] == 16 * 16384 * 4
+    assert got["all-reduce"] == 4096 * 2 + 512 * 2   # includes -start forms
+    assert got["reduce-scatter"] == 2 * 64 * 4
+    assert got["all-to-all"] == 2 * 8 * 8 * 4        # tuple result
+    assert got["collective-permute"] == 100
+    # non-collectives ignored
+    assert sum(got.values()) < 16 * 16384 * 4 + 4096 * 2 + 512 * 2 + \
+        2 * 64 * 4 + 2 * 8 * 8 * 4 + 100 + 1
+
+
+def test_analyze_terms_and_bottleneck():
+    cost = {"flops": 197e12 * 0.5, "bytes accessed": 819e9 * 0.1}
+    hlo = "%x = f32[1000]{0} all-reduce(%y)"
+    t = roofline.analyze("a", "s", "pod1", 256, cost, hlo,
+                         model_flops=197e12 * 0.5 * 256 * 0.8)
+    assert abs(t.t_compute - 0.5) < 1e-9
+    assert abs(t.t_memory - 0.1) < 1e-9
+    assert t.bottleneck == "compute"
+    assert abs(t.useful_ratio - 0.8) < 1e-9
+    # all-reduce traffic weighted 2x
+    assert t.coll_bytes_per_chip == 2 * 1000 * 4
+
+
+def test_probe_extrapolation_math():
+    """The (fixed + unit*n) x accum + opt composition used by report.py."""
+    from repro.launch.report import extrapolate_train
+    # synthetic: unit(S) = 2S + 0.001 S^2 ; fixed(S) = 100 + S ; opt1 = 60
+    def c(u, s):
+        return u * (2 * s + 0.001 * s * s) + 100 + s
+
+    probes = {}
+    for u in (1, 2):
+        for s in (1024, 2048):
+            probes[f"u{u}_s{s}"] = {"flops": c(u, s), "seq": s}
+    probes["opt_full"] = {"flops": 500.0}
+    probes["opt_u1"] = {"flops": 60.0}
+    got = extrapolate_train(probes, "flops", target_seq=4096, n_units=10,
+                            accum=4, probe_seqs=(1024, 2048))
+    unit_4096 = 2 * 4096 + 0.001 * 4096 * 4096
+    fixed_4096 = 100 + 4096
+    want = 4 * (fixed_4096 - 60 + 10 * unit_4096) + 500.0
+    assert abs(got - want) / want < 1e-6

@@ -1,0 +1,103 @@
+"""BFC serving admission control + incremental decode correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.runtime import serving
+
+
+@pytest.fixture(scope="module")
+def server_setup():
+    cfg = configs.reduced("phi3-mini-3.8b")
+    params, _ = model.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def test_all_requests_complete(server_setup):
+    cfg, params = server_setup
+    srv = serving.BFCServer(cfg, params, n_slots=4, max_len=64)
+    reqs = [serving.Request(rid=i, client=i % 3, prompt=[1 + i, 2, 3],
+                            max_new=4) for i in range(9)]
+    held = [r for r in reqs if not srv.submit(r)]
+    done = srv.drain()
+    while held:
+        still = [r for r in held if not srv.submit(r)]
+        done += srv.drain()
+        assert len(still) < len(held), "resume starvation"
+        held = still
+    assert srv.stats.completed == 9
+    assert all(len(r.out) == 4 for r in done)
+
+
+def test_pause_threshold_respected(server_setup):
+    cfg, params = server_setup
+    srv = serving.BFCServer(cfg, params, n_slots=2, max_len=32,
+                            hrtt_ticks=2)
+    n_pause = 0
+    for i in range(20):
+        ok = srv.submit(serving.Request(rid=i, client=i % 5,
+                                        prompt=[1, 2], max_new=2))
+        if not ok:
+            n_pause += 1
+        srv.tick()
+    assert srv.stats.pauses_sent > 0
+    assert n_pause > 0          # clients actually saw backpressure
+    srv.drain()
+    # peak pending stays near the threshold, far below total offered
+    assert srv.stats.peak_pending <= 20
+
+
+def test_slot_reuse(server_setup):
+    cfg, params = server_setup
+    srv = serving.BFCServer(cfg, params, n_slots=2, max_len=32)
+    pending = [serving.Request(rid=i, client=0, prompt=[1], max_new=2)
+               for i in range(6)]
+    for _ in range(50):
+        pending = [r for r in pending if not srv.submit(r)]
+        srv.drain()
+        if not pending:
+            break
+    assert srv.stats.completed == 6
+    assert sorted(srv.free) == [0, 1]       # all slots reclaimed
+
+
+def test_served_tokens_match_full_context(server_setup):
+    """Greedy serving output == greedy decoding with the full forward pass."""
+    cfg, params = server_setup
+    prompt = [3, 7, 11]
+    max_new = 5
+
+    srv = serving.BFCServer(cfg, params, n_slots=2, max_len=32)
+    srv.submit(serving.Request(rid=0, client=0, prompt=list(prompt),
+                               max_new=max_new))
+    done = srv.drain()
+    got = done[0].out
+
+    # reference: repeated full forward + argmax
+    toks = list(prompt)
+    ref = []
+    for _ in range(max_new):
+        h, _, _ = model.backbone(params, cfg,
+                                 jnp.asarray([toks], jnp.int32))
+        lg = model.logits_for(params, cfg, h[:, -1:])
+        nxt = int(jnp.argmax(lg[0, 0]))
+        ref.append(nxt)
+        toks.append(nxt)
+    assert got == ref, (got, ref)
+
+
+def test_heterogeneous_lengths(server_setup):
+    """Slots at different kv_len must not contaminate each other."""
+    cfg, params = server_setup
+    srv = serving.BFCServer(cfg, params, n_slots=2, max_len=32)
+    srv.submit(serving.Request(rid=0, client=0, prompt=[5, 6, 7, 8, 9],
+                               max_new=3))
+    srv.tick(); srv.tick()      # first request mid-prefill
+    srv.submit(serving.Request(rid=1, client=1, prompt=[5, 6, 7, 8, 9],
+                               max_new=3))
+    done = {r.rid: r for r in srv.drain()}
+    # same prompt, same params, greedy -> same output regardless of arrival
+    assert done[0].out == done[1].out

@@ -1,0 +1,104 @@
+"""Simulator integrity on a tiny Clos: conservation, completion, isolation."""
+import numpy as np
+import pytest
+
+from repro.sim import engine, metrics, topology, workload
+from repro.sim.config import (BFC, BFC_STOCHASTIC, DCTCP, IDEAL_FQ,
+                              SimConfig)
+from repro.sim.topology import ClosParams
+
+CLOS = ClosParams(n_servers=16, n_tor=2, n_spine=2, switch_buffer_pkts=2048)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    topo = topology.build(CLOS)
+    wp = workload.WorkloadParams(workload="fb_hadoop", load=0.5, seed=7)
+    flows = workload.generate(topo, wp, n_flows=150)
+    return topo, flows
+
+
+@pytest.fixture(scope="module")
+def bfc_run(tiny):
+    topo, flows = tiny
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    st, emits = engine.run(topo, flows, cfg, n_ticks=int(flows.horizon + 4000))
+    return topo, flows, cfg, st, emits
+
+
+def test_topology_shapes():
+    topo = topology.build(CLOS)
+    assert topo.n_ports == 16 + 2 * (8 + 2) + 2 * 2
+    assert topo.n_switches == 4
+    r = workload.generate(topo, workload.WorkloadParams(seed=1), 50).routes
+    # every route starts at the NIC and stays in range
+    assert (r[:, 0] < 16).all()
+    assert (r < topo.n_ports).all()
+
+
+def test_conservation(bfc_run):
+    _, flows, _, st, _ = bfc_run
+    sent = int(np.asarray(st.sent).sum())
+    delivered = int(np.asarray(st.delivered).sum())
+    queued = int(np.asarray(st.f_cnt).sum())
+    inflight = int((np.asarray(st.wire_f) >= 0).sum())
+    drops = int(st.stat_drops)
+    assert sent == delivered + queued + inflight + drops
+    assert drops == 0  # BFC on this load must not drop
+
+
+def test_no_overdelivery(bfc_run):
+    _, flows, _, st, _ = bfc_run
+    assert (np.asarray(st.delivered) <= flows.size_pkts).all()
+
+
+def test_flows_complete(bfc_run):
+    _, flows, _, st, _ = bfc_run
+    done = np.asarray(st.done)
+    frac = (done >= 0).mean()
+    assert frac > 0.95, f"only {frac:.2%} completed"
+    # completion time after arrival, and >= ideal
+    fct = done - flows.arrival_tick
+    ok = done >= 0
+    assert (fct[ok] >= flows.ideal_fct[ok]).all()
+
+
+def test_backpressure_active(bfc_run):
+    _, _, _, st, _ = bfc_run
+    assert int(st.stat_pauses) > 0
+    # all pauses eventually cleaned up: counting filter sums to #paused now
+    assert int(np.asarray(st.bloom_counts).sum()) == \
+        int(np.asarray(st.f_paused).sum()) * 4
+
+
+def test_bfc_bounds_buffers_vs_dctcp(tiny, bfc_run):
+    topo, flows = tiny
+    _, _, _, st_bfc, em_bfc = bfc_run
+    cfg = SimConfig(proto=DCTCP, clos=CLOS)
+    st_d, em_d = engine.run(topo, flows, cfg,
+                            n_ticks=int(flows.horizon + 4000))
+    assert em_bfc[:, 0].max() < em_d[:, 0].max()
+
+
+def test_queue_collisions_rare_dynamic_vs_stochastic(tiny):
+    topo, flows = tiny
+    res = {}
+    for proto in (BFC, BFC_STOCHASTIC):
+        cfg = SimConfig(proto=proto, clos=CLOS)
+        st, _ = engine.run(topo, flows, cfg,
+                           n_ticks=int(flows.horizon + 4000))
+        res[proto.name] = (int(st.stat_collisions), int(st.stat_allocs))
+    c_dyn, a_dyn = res["bfc"]
+    c_sto, a_sto = res["bfc_stochastic"]
+    assert c_dyn / max(a_dyn, 1) < 0.01           # paper: <1% w/o incast
+    assert c_sto > c_dyn                          # Fig. 19
+
+
+def test_ideal_fq_unbounded_buffer_but_completes(tiny):
+    topo, flows = tiny
+    cfg = SimConfig(proto=IDEAL_FQ, clos=CLOS)
+    st, emits = engine.run(topo, flows, cfg,
+                           n_ticks=int(flows.horizon + 4000))
+    assert int(st.stat_drops) == 0
+    done = np.asarray(st.done)
+    assert (done >= 0).mean() > 0.95
