@@ -1,12 +1,19 @@
 """One benchmark per paper table/figure. Each function reproduces the
 experiment's setup (scaled per benchmarks.common) and prints CSV rows plus a
-PASS/INFO validation line against the paper's qualitative claim."""
+PASS/INFO validation line against the paper's qualitative claim.
+
+Grid-shaped experiments (protocol x load x seed sweeps) are declared in
+`repro.sim.scenarios` and executed through `repro.sim.sweep`, which batches
+every grid point of a protocol variant into ONE compiled, vmapped simulator
+program instead of recompiling the step per point."""
 from __future__ import annotations
 
 import numpy as np
 
-from .common import (CLOS, FULL, emit, emit_fct_table, make_flows, run_proto)
+from .common import (CLOS, DRAIN, FULL, N_FLOWS, emit, emit_fct_table,
+                     make_flows, run_proto, run_scenario)
 from repro.sim import metrics as sim_metrics
+from repro.sim import scenarios, sweep, topology
 from repro.sim.config import PRESETS, ProtoConfig, SimConfig
 from repro.sim.topology import ClosParams
 from dataclasses import replace
@@ -33,12 +40,17 @@ def fig3_4_buffer_occupancy_vs_speed():
 
 
 def fig5_table1_long_flow():
-    """Fig. 5 / Table 1: long-lived flow vs variable cross traffic."""
-    topo, flows = make_flows(load=0.6, long_lived=1, seed=5)
+    """Fig. 5 / Table 1: long-lived flow vs variable cross traffic. The
+    workload comes from the `table1_long_lived` registry entry; runs stay
+    serial because each needs a distinct probe_flow config (the compile
+    cache still dedupes everything else)."""
+    sc = scenarios.get("table1_long_lived")
+    topo = topology.build(CLOS)
+    flows = sc.flowset(topo, sc.loads[0], sc.seeds[0], n_flows=N_FLOWS)
     probe = int(np.argmax(flows.size_pkts))   # the long-lived flow
     rows = {}
-    ticks = int(flows.horizon + 60_000)
-    for proto in ("bfc", "hpcc", "dcqcn", "hpcc_sfq"):
+    ticks = int(flows.horizon + sc.drain_ticks)
+    for proto in sc.protos:
         m, st, emits, _ = run_proto(proto, flows, topo, probe=probe,
                                     ticks=ticks)
         tl = sim_metrics.throughput_timeline(emits, window=1250)
@@ -54,36 +66,27 @@ def fig5_table1_long_flow():
 
 
 def fig9_10_google_main():
-    """Figs. 9-10: Google workload, 60% load, with and without incast."""
-    for tag, inc in (("fig10_noincast", 0.0), ("fig9_incast", 0.05)):
-        topo, flows = make_flows(load=0.55 if inc else 0.6, wl="google",
-                                 incast_load=inc,
-                                 incast_degree=(100 if FULL else 20),
-                                 incast_total_kb=(20480 if FULL else 4000),
-                                 seed=9)
+    """Figs. 9-10: Google workload, 60% load, with and without incast.
+    Driven through the scenario registry + batched sweep."""
+    for tag, name in (("fig10_noincast", "fig10_noincast"),
+                      ("fig9_incast", "fig6_incast")):
         p99 = {}
-        for proto in ("bfc", "hpcc", "dcqcn", "dctcp", "ideal_fq"):
-            m, st, emits, wall = run_proto(proto, flows, topo)
-            emit_fct_table(f"{tag}_{proto}", m)
-            p99[proto] = m.fct_slowdown_p99
+        for r in run_scenario(name):
+            emit_fct_table(f"{tag}_{r.proto}", r.metrics)
+            p99[r.proto] = r.metrics.fct_slowdown_p99
         emit(tag, "validates_paper(BFC best realizable p99)",
              p99["bfc"] <= min(p99["hpcc"], p99["dcqcn"], p99["dctcp"]))
         emit(tag, "bfc_vs_ideal_gap", round(p99["bfc"] - p99["ideal_fq"], 3))
 
 
 def fig11_facebook():
-    """Fig. 11: Facebook distribution, with/without incast, p99 by size."""
-    for tag, inc in (("fig11_noincast", 0.0), ("fig11_incast", 0.05)):
-        topo, flows = make_flows(load=0.55 if inc else 0.6, wl="fb_hadoop",
-                                 incast_load=inc,
-                                 incast_degree=(100 if FULL else 20),
-                                 incast_total_kb=(20480 if FULL else 4000),
-                                 seed=11)
+    """Fig. 11: Facebook distribution, with/without incast, p99 by size.
+    Driven through the scenario registry + batched sweep."""
+    for tag in ("fig11_noincast", "fig11_incast"):
         p99 = {}
-        for proto in ("bfc", "hpcc", "dctcp", "ideal_fq"):
-            m, *_ = run_proto(proto, flows, topo)
-            emit_fct_table(f"{tag}_{proto}", m)
-            p99[proto] = m.fct_slowdown_p99
+        for r in run_scenario(tag):
+            emit_fct_table(f"{tag}_{r.proto}", r.metrics)
+            p99[r.proto] = r.metrics.fct_slowdown_p99
         emit(tag, "validates_paper(BFC best realizable p99)",
              p99["bfc"] <= min(p99["hpcc"], p99["dctcp"]))
 
@@ -101,37 +104,40 @@ def fig12_srf_scheduling():
 
 
 def fig16_load_sweep():
-    """Fig. 16: load sweep 50-90%: long-flow median + short-flow p99."""
-    for load in (0.5, 0.7, 0.8, 0.9):
-        topo, flows = make_flows(load=load, seed=16)
-        for proto in ("bfc", "dctcp"):
-            m, *_ = run_proto(proto, flows, topo)
-            small = m.by_size.get("(0,1]KB", {}).get("p99", float("nan"))
-            long_bins = [v for k, v in m.by_size.items()
-                         if "3000" in k or "10000" in k]
-            emit(f"fig16_{proto}_load{int(load*100)}", "p99_short",
-                 round(small, 2))
-            emit(f"fig16_{proto}_load{int(load*100)}", "completed",
-                 m.completed)
+    """Fig. 16: load sweep 50-90%: the whole grid (2 protos x 4 loads) runs
+    as two compiled programs via the `fig5_load_sweep` registry entry."""
+    for r in run_scenario("fig5_load_sweep"):
+        m = r.metrics
+        load = int(r.label.rsplit("load", 1)[1].split("_")[0])
+        small = m.by_size.get("(0,1]KB", {}).get("p99", float("nan"))
+        emit(f"fig16_{r.proto}_load{load}", "p99_short", round(small, 2))
+        emit(f"fig16_{r.proto}_load{load}", "completed", m.completed)
     emit("fig16", "claim", "BFC keeps short-flow p99 near 1 up to ~80% load")
 
 
 def fig17_incast_degree():
     """Fig. 17: incast degree sweep; BFC + per-dest FQ avoids queue
-    exhaustion at extreme degrees."""
-    for degree in (10, 30, 60):
-        topo, flows = make_flows(load=0.55, incast_load=0.05,
-                                 incast_degree=degree,
-                                 incast_total_kb=degree * 200, seed=17)
-        p99 = {}
-        for proto in ("bfc", "bfc_dest", "hpcc"):
-            m, *_ = run_proto(proto, flows, topo)
-            p99[proto] = m.fct_slowdown_p99
-            emit(f"fig17_{proto}_deg{degree}", "p99_slowdown",
-                 round(m.fct_slowdown_p99, 2))
+    exhaustion at extreme degrees. The three degrees of each protocol batch
+    into one compiled program via sweep.run_grid."""
+    degrees = (10, 30, 60)
+    topo = topology.build(CLOS)
+    flowsets = {}
+    for degree in degrees:
+        _, flowsets[degree] = make_flows(load=0.55, incast_load=0.05,
+                                         incast_degree=degree,
+                                         incast_total_kb=degree * 200,
+                                         seed=17)
+    cases = [(f"fig17_{proto}_deg{deg}",
+              SimConfig(proto=PRESETS[proto], clos=CLOS), flowsets[deg])
+             for proto in ("bfc", "bfc_dest", "hpcc") for deg in degrees]
+    p99 = {}
+    for r in sweep.run_grid(topo, cases, drain=DRAIN):
+        p99[r.label] = r.metrics.fct_slowdown_p99
+        emit(r.label, "p99_slowdown", round(r.metrics.fct_slowdown_p99, 2))
+    for degree in degrees:
         emit(f"fig17_deg{degree}",
              "validates_paper(BFC beats HPCC at all degrees)",
-             p99["bfc"] <= p99["hpcc"])
+             p99[f"fig17_bfc_deg{degree}"] <= p99[f"fig17_hpcc_deg{degree}"])
 
 
 def fig18_queue_count():
@@ -261,8 +267,23 @@ def fig23_24_resource_sensitivity():
     emit("fig23_24", "claim", "performance insensitive to table/filter size")
 
 
+def websearch_tail():
+    """Beyond the paper's figures: DCTCP WebSearch size distribution (the
+    registry's `websearch_tail` grid) — heavy-tailed bytes stress the tail
+    at 60/80% load across 2 seeds; 4 batched lanes per protocol."""
+    p99 = {}
+    for r in run_scenario("websearch_tail"):
+        emit_fct_table(r.label.replace("/", "_"), r.metrics)
+        p99.setdefault(r.proto, []).append(r.metrics.fct_slowdown_p99)
+    # per-grid-point comparison: protocols share (load, seed) ordering
+    emit("websearch_tail", "validates_paper(BFC best realizable p99)",
+         all(b <= min(h, d) for b, h, d in
+             zip(p99["bfc"], p99["hpcc"], p99["dctcp"])))
+
+
 ALL = [fig3_4_buffer_occupancy_vs_speed, fig5_table1_long_flow,
        fig9_10_google_main, fig11_facebook, fig12_srf_scheduling,
        fig16_load_sweep, fig17_incast_degree, fig18_queue_count,
        fig19_stochastic_vs_dynamic, fig20_buffer_optimization,
-       fig21_incast_flow_fct, fig23_24_resource_sensitivity]
+       fig21_incast_flow_fct, fig23_24_resource_sensitivity,
+       websearch_tail]

@@ -1,6 +1,9 @@
 """Benchmark runner: one function per paper table/figure + microbenches.
 Prints ``name,metric,value`` CSV. Set BENCH_FULL=1 for paper-scale topology;
-use --only substring to filter."""
+use --only substring to filter. ``--scenario NAME`` (or ``all``) runs any
+entry of the experiment registry (repro.sim.scenarios) through the batched
+sweep subsystem instead of the figure list; ``--list-scenarios`` shows the
+registry."""
 from __future__ import annotations
 
 import argparse
@@ -9,11 +12,38 @@ import time
 import traceback
 
 
+def run_scenarios(which: str) -> None:
+    from .common import emit, emit_fct_table, run_scenario
+    from repro.sim import engine, scenarios
+    names = scenarios.names() if which == "all" else [which]
+    for name in names:
+        print(f"# === scenario {name} ===", flush=True)
+        t0 = time.time()
+        for r in run_scenario(name):
+            emit_fct_table(r.label.replace("/", "_"), r.metrics)
+        emit(f"scenario_{name}", "wall_s", round(time.time() - t0, 1))
+    emit("scenarios", "xla_compilations", engine.trace_count())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter")
     ap.add_argument("--skip-micro", action="store_true")
+    ap.add_argument("--scenario", default="",
+                    help="run one registry scenario (or 'all') through the "
+                         "batched sweep instead of the figure list")
+    ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        from . import common  # noqa: F401  (sys.path setup for repro)
+        from repro.sim import scenarios
+        for n in scenarios.names():
+            print(f"{n}: {scenarios.get(n).description}")
+        return
+    if args.scenario:
+        run_scenarios(args.scenario)
+        return
 
     from . import paper_figs, micro
     benches = list(paper_figs.ALL) + ([] if args.skip_micro else

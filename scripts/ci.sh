@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the fast test set (everything not marked `slow`), fail-fast.
+# The `slow` marker covers subprocess dry-run compiles and full-length
+# simulations (~6 min) that should not gate every iteration; run them with
+#   scripts/ci.sh slow        # only the slow set
+#   scripts/ci.sh all         # everything
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+case "${1:-tier1}" in
+  tier1) exec python -m pytest -x -q -m "not slow" ;;
+  slow)  exec python -m pytest -q -m "slow" ;;
+  all)   exec python -m pytest -x -q ;;
+  *)     echo "usage: $0 [tier1|slow|all]" >&2; exit 2 ;;
+esac

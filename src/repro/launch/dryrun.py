@@ -91,7 +91,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str):
         with mesh:
             lowered = jfn.lower(*args)
             compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = roofline.cost_dict(compiled.cost_analysis())
     try:
         mem = compiled.memory_analysis()
         mem_bytes = getattr(mem, "temp_size_in_bytes", 0) + \
@@ -206,7 +206,7 @@ def probe_cell(arch: str, shape_name: str, mesh, mesh_name: str):
             with shd.use_rules(rules, mesh):
                 with mesh:
                     compiled = jfn.lower(*args).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = roofline.cost_dict(compiled.cost_analysis())
         coll = roofline.collective_bytes(compiled.as_text())
         recs["probes"][tag] = {
             "flops": float(cost.get("flops", 0.0)),
@@ -255,7 +255,7 @@ def probe_cell(arch: str, shape_name: str, mesh, mesh_name: str):
                         fn, in_shardings=(oshard, gshard),
                         donate_argnums=(0,)).lower(oshapes,
                                                    gshapes).compile()
-                cost = compiled.cost_analysis() or {}
+                cost = roofline.cost_dict(compiled.cost_analysis())
                 recs["probes"][tag] = {
                     "flops": float(cost.get("flops", 0.0)),
                     "bytes": float(cost.get("bytes accessed", 0.0)),

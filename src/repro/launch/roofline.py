@@ -32,6 +32,17 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
+def cost_dict(cost) -> Dict[str, float]:
+    """Normalize `compiled.cost_analysis()` output to a flat dict.
+
+    Depending on the jax/XLA version this is a dict, a list with one dict
+    per device-program (we want the first: all partitions are identical
+    SPMD modules), or None."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}
+
+
 def _shape_bytes(shape_str: str) -> int:
     """Total bytes of an HLO result type, e.g. 'f32[16,128]{1,0}' or a tuple
     '(f32[4], bf16[8,8])'."""
@@ -104,6 +115,7 @@ def analyze(arch: str, shape: str, mesh_name: str, chips: int,
             cost: Dict[str, float], hlo_text: str,
             model_flops: float,
             mem_bytes: Optional[float] = None) -> RooflineTerms:
+    cost = cost_dict(cost)
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     coll = collective_bytes(hlo_text)

@@ -1,2 +1,3 @@
 """Packet-level network simulator: the paper's evaluation substrate in JAX."""
-from . import config, engine, metrics, topology, workload  # noqa: F401
+from . import (config, engine, metrics, scenarios, sweep, topology,  # noqa: F401
+               workload)

@@ -7,6 +7,12 @@ egress port transmits at most one MTU packet per tick, packets propagate on
 
 Design notes
 ------------
+* Flow metadata (routes, sizes, arrivals, hash positions, ...) is a traced
+  operand (`FlowOperands`), NOT a closure constant: every workload with the
+  same padded flow count F reuses one compiled program, and `sim/sweep.py`
+  vmaps the step over a leading batch axis to run a whole parameter grid in
+  a single XLA compilation. Only the topology tables and the protocol/timing
+  configuration remain compile-time constants.
 * All switch state is dense: per-(port, queue) ring buffers of packet records,
   per-(flow, hop) assignment/pause state, per-port Bloom filters. Multiple
   same-tick arrivals at one egress port are serialized with O(P^2) pairwise
@@ -46,6 +52,47 @@ from .workload import FlowSet
 
 I32 = jnp.int32
 BIG = np.int32(1 << 20)  # large-but-packable sentinel for priority keys
+
+# Arrival tick of padded "phantom" flows (sweep batching): beyond any
+# simulated horizon, so they never start, never transmit, never allocate.
+PHANTOM_ARRIVAL = int(1 << 30)
+
+
+class FlowOperands(NamedTuple):
+    """Per-flow metadata fed to the jitted step as traced operands.
+
+    Shapes are static per compiled program: (F,) / (F, MAX_HOPS) / (F, S).
+    `sim/sweep.py` stacks these along a leading batch axis and vmaps the
+    step, so one compilation serves a whole seed/load grid."""
+    routes: jnp.ndarray      # (F, H) egress port per hop, -1 padded
+    src: jnp.ndarray         # (F,) source server
+    dst: jnp.ndarray         # (F,) destination server
+    size: jnp.ndarray        # (F,) flow size in packets
+    arrival: jnp.ndarray     # (F,) arrival tick (PHANTOM_ARRIVAL = never)
+    fid: jnp.ndarray         # (F,) 32-bit flow id
+    fpos: jnp.ndarray        # (F, S) Bloom-filter bit positions
+    fbucket: jnp.ndarray     # (F,) flow-table bucket
+    fb_delay: jnp.ndarray    # (F,) one-way feedback delay in ticks
+
+
+def pack_flows(flows: FlowSet, cfg: SimConfig) -> FlowOperands:
+    """Derive the traced operand bundle for a FlowSet under `cfg`."""
+    bparams = bloom.BloomParams(cfg.bloom_stages, cfg.bloom_stage_bits)
+    ftp = FlowTableParams(cfg.ft_buckets, cfg.ft_bucket_size)
+    routes = np.asarray(flows.routes, np.int32)
+    fid = jnp.asarray(np.asarray(flows.fid, np.int32))
+    hops = (routes >= 0).sum(1)
+    fb_delay = (hops * cfg.clos.prop_ticks + 1).astype(np.int32)
+    return FlowOperands(
+        routes=jnp.asarray(routes),
+        src=jnp.asarray(np.asarray(flows.src, np.int32)),
+        dst=jnp.asarray(np.asarray(flows.dst, np.int32)),
+        size=jnp.asarray(np.asarray(flows.size_pkts, np.int32)),
+        arrival=jnp.asarray(np.asarray(flows.arrival_tick, np.int32)),
+        fid=fid,
+        fpos=bloom.positions(fid, bparams),
+        fbucket=buckets_of(fid, ftp),
+        fb_delay=jnp.asarray(fb_delay))
 
 
 class SimState(NamedTuple):
@@ -143,33 +190,27 @@ def _counts_per_key(keys, valid, num):
                                num_segments=num)
 
 
-def make_step(topo: Topology, flows: FlowSet, cfg: SimConfig):
-    """Build (init_state, step). All flow metadata and topology tables are
-    closed over as compile-time constants."""
+def make_step(topo: Topology, cfg: SimConfig, n_flows: int):
+    """Build (init_state, step). Topology tables and protocol config are
+    compile-time constants; per-flow metadata arrives at trace time as a
+    `FlowOperands` operand of `step`, so one compiled program serves every
+    workload with the same (padded) flow count."""
     pc, tm = cfg.proto, cfg.timing
     P = topo.n_ports
     Q = pc.n_queues
     CAP = pc.queue_cap
     PLCAP = pc.pauselist_cap
     PROP = cfg.clos.prop_ticks
-    F = flows.n_flows
+    F = int(n_flows)
     H = MAX_HOPS
     NSRV = topo.params.n_servers
     NSW = topo.n_switches
     TAU = tm.tau_ticks
     S = cfg.bloom_stages
 
-    # ---- constants -----------------------------------------------------------
-    routes = jnp.asarray(flows.routes)                   # (F, H)
-    src = jnp.asarray(flows.src)
-    dst = jnp.asarray(flows.dst)
-    size = jnp.asarray(flows.size_pkts)
-    arrival = jnp.asarray(flows.arrival_tick)
-    fid = jnp.asarray(flows.fid)
     bparams = bloom.BloomParams(cfg.bloom_stages, cfg.bloom_stage_bits)
-    fpos = bloom.positions(fid, bparams)                 # (F, S)
-    ftp = FlowTableParams(cfg.ft_buckets, cfg.ft_bucket_size)
-    fbucket = buckets_of(fid, ftp)                       # (F,)
+
+    # ---- topology constants --------------------------------------------------
     port_switch = jnp.asarray(topo.port_switch)          # (P,) -1 for NICs
     is_nic = jnp.asarray(topo.port_is_nic)
     # switch fed by each port (for PFC / buffer accounting); -1 = a server
@@ -185,10 +226,9 @@ def make_step(topo: Topology, flows: FlowSet, cfg: SimConfig):
         for tor in range(p0.n_tor):
             feeds[int(topo.spine_down_port(sp, tor))] = tor
     feeds = jnp.asarray(feeds)
-    # one-way feedback delay (receiver -> sender), and hop count
-    hops_per_flow = (flows.routes >= 0).sum(1)
-    fb_delay = jnp.asarray((hops_per_flow * PROP + 1).astype(np.int32))
-    RING = int(hops_per_flow.max() * PROP + 2) if F else 2
+    # feedback ring sized for the worst-case one-way delay (static so the
+    # compiled program is independent of the workload's actual hop counts)
+    RING = H * PROP + 2
     RRING = tm.rto_ticks + 1
     buffer_limit = (1 << 29) if pc.infinite_buffer else cfg.clos.switch_buffer_pkts
     occ_bin_ref = cfg.clos.switch_buffer_pkts
@@ -243,11 +283,13 @@ def make_step(topo: Topology, flows: FlowSet, cfg: SimConfig):
             qlen_hist=z((cfg.occ_bins,)),
         )
 
-    def hop_of_port(f, p):
-        """Which hop index of flow f's route is port p (f, p broadcastable)."""
-        return jnp.argmax(routes[f] == p[..., None], axis=-1).astype(I32)
+    def step(st: SimState, ops: FlowOperands):
+        routes, src, dst, size, arrival, fid, fpos, fbucket, fb_delay = ops
 
-    def step(st: SimState, _):
+        def hop_of_port(f, p):
+            """Which hop of flow f's route is port p (f, p broadcastable)."""
+            return jnp.argmax(routes[f] == p[..., None], axis=-1).astype(I32)
+
         t = st.t
 
         # ---- phase 0: derived state -----------------------------------------
@@ -687,6 +729,44 @@ def make_step(topo: Topology, flows: FlowSet, cfg: SimConfig):
     return init_state, step
 
 
+# One entry appended per XLA trace of a simulator program (tracing happens
+# exactly once per compilation), so tests and sweep drivers can assert how
+# many compilations a grid actually triggered.
+TRACE_EVENTS: list = []
+
+
+def trace_count() -> int:
+    return len(TRACE_EVENTS)
+
+
+@functools.lru_cache(maxsize=None)
+def compiled_runner(clos_params, cfg: SimConfig, n_flows: int, n_ticks: int,
+                    unroll: int = 1, batched: bool = False):
+    """The jitted simulator program for one static signature.
+
+    Keyed on everything that shapes the XLA program: topology parameters,
+    protocol/timing config, (padded) flow count, tick count. Repeat calls —
+    e.g. every seed/load of a sweep, or serial runs over same-sized
+    workloads — reuse the cached executable instead of recompiling the
+    ~700-line scan. With `batched=True` the returned function takes
+    `FlowOperands` with a leading batch axis and vmaps the whole simulation
+    over it (still a single compilation for the entire grid)."""
+    from .topology import build
+    topo = build(clos_params)
+    init_state, step = make_step(topo, cfg, n_flows)
+
+    def one(ops):
+        return jax.lax.scan(lambda s, _: step(s, ops), init_state(), None,
+                            length=n_ticks, unroll=unroll)
+
+    def go(ops):
+        TRACE_EVENTS.append((cfg.proto.name, clos_params, n_flows, n_ticks,
+                             batched))
+        return jax.vmap(one)(ops) if batched else one(ops)
+
+    return jax.jit(go)
+
+
 def run(topo: Topology, flows: FlowSet, cfg: SimConfig, n_ticks: int,
         unroll: int = 1):
     """Run the simulation for `n_ticks`. Returns (final_state, emits[T,3]).
@@ -694,12 +774,7 @@ def run(topo: Topology, flows: FlowSet, cfg: SimConfig, n_ticks: int,
     unroll: ticks inlined per scan iteration. Measured WORSE at 4 on CPU
     (§Perf R9) — the step is gather/scatter-bound, not dispatch-bound — so
     the default stays 1."""
-    init_state, step = make_step(topo, flows, cfg)
     n_ticks = int(np.ceil(n_ticks / unroll) * unroll)
-
-    @jax.jit
-    def go(st):
-        return jax.lax.scan(step, st, None, length=n_ticks, unroll=unroll)
-
-    st, emits = go(init_state())
+    go = compiled_runner(topo.params, cfg, flows.n_flows, n_ticks, unroll)
+    st, emits = go(pack_flows(flows, cfg))
     return jax.device_get(st), np.asarray(emits)

@@ -6,9 +6,12 @@ Table 1), queue-length distribution (Fig. 20), collision rates (Figs. 18c,
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .workload import FlowSet
@@ -130,6 +133,82 @@ def hist_percentile(hist: np.ndarray, q: float, bin_ref: int) -> float:
     idx = int(np.searchsorted(cdf, q / 100.0))
     idx = min(idx, len(hist) - 1)
     return (idx + 0.5) * bin_ref / len(hist)
+
+
+# ---- batched (device-side) aggregation for vmapped sweeps -------------------
+# Percentiles over a masked axis, computed with jnp inside jit: a whole
+# sweep's FCT-slowdown table comes off the device as one (B, bins, pcts)
+# array with no per-config host round-trips.
+
+def _masked_percentiles(vals, mask, qs):
+    """np.percentile('linear') over vals[mask]; NaN where mask is empty.
+
+    vals (F,), mask (F,), qs (Nq,) in [0, 100]."""
+    n = mask.sum()
+    vs = jnp.sort(jnp.where(mask, vals, jnp.inf))
+    pos = qs / 100.0 * jnp.maximum(n - 1, 0).astype(vs.dtype)
+    lo = jnp.floor(pos).astype(jnp.int32)
+    hi = jnp.ceil(pos).astype(jnp.int32)
+    top = jnp.maximum(vals.shape[0] - 1, 0)
+    lo_v = vs[jnp.clip(lo, 0, top)]
+    hi_v = vs[jnp.clip(hi, 0, top)]
+    out = lo_v + (hi_v - lo_v) * (pos - lo)
+    return jnp.where(n > 0, out, jnp.nan)
+
+
+@functools.partial(jax.jit, static_argnames=("percentiles",
+                                             "size_bins_pkts"))
+def batched_slowdown_percentiles(
+        done, arrival, ideal, size_pkts, valid,
+        percentiles: Tuple[float, ...] = (50.0, 95.0, 99.0),
+        size_bins_pkts: Tuple[int, ...] = tuple(SIZE_BINS_KB)):
+    """FCT-slowdown percentiles per size bucket for a vmapped batch.
+
+    All inputs are (B, F) device arrays straight out of `sweep.run_batch`
+    (`done`/`arrival`/`ideal`/`size_pkts` from the batched SimState +
+    stacked FlowOperands; `valid` masks completed, real — non-phantom,
+    non-excluded — flows). Returns (B, 1 + n_bins, n_pcts): row 0 is all
+    sizes, row 1+i is the i-th (lo, hi] size bin. Rows with no completed
+    flow are NaN. Runs entirely on device: one jit-compiled reduction, no
+    per-config host transfers."""
+    qs = jnp.asarray(percentiles, jnp.float32)
+
+    def one(done, arrival, ideal, size, valid):
+        slow = (done - arrival).astype(jnp.float32) \
+            / jnp.maximum(ideal, 1).astype(jnp.float32)
+        rows = [_masked_percentiles(slow, valid, qs)]
+        lo = 0
+        for hi in size_bins_pkts:
+            rows.append(_masked_percentiles(
+                slow, valid & (size > lo) & (size <= hi), qs))
+            lo = hi
+        return jnp.stack(rows)
+
+    return jax.vmap(one)(done, arrival, ideal, size_pkts, valid)
+
+
+def slowdown_table(batched_state, flowsets,
+                   percentiles: Tuple[float, ...] = (50.0, 95.0, 99.0),
+                   include_incast: bool = False) -> np.ndarray:
+    """Convenience wrapper: batched percentile table from a `sweep.run_batch`
+    result + the (unpadded) FlowSets that produced it. Stacks arrival/ideal/
+    size/incast host-side (they are tiny), masks phantoms, and runs the
+    aggregation on device."""
+    from .sweep import pad_flowset  # local import to avoid a cycle
+    F = np.asarray(batched_state.done).shape[1]
+    padded = [pad_flowset(f, F) for f in flowsets]
+    arrival = jnp.asarray(np.stack([f.arrival_tick for f in padded]))
+    ideal = jnp.asarray(np.stack([f.ideal_fct for f in padded]))
+    size = jnp.asarray(np.stack([f.size_pkts for f in padded]))
+    incast = np.stack([f.is_incast for f in padded])
+    phantom = np.stack([np.arange(F) >= f.n_flows for f in flowsets])
+    done = jnp.asarray(np.asarray(batched_state.done))
+    valid = (done >= 0) & jnp.asarray(~phantom)
+    if not include_incast:
+        valid &= jnp.asarray(~incast)
+    out = batched_slowdown_percentiles(done, arrival, ideal, size, valid,
+                                       percentiles=tuple(percentiles))
+    return np.asarray(out)
 
 
 def format_report(m: RunMetrics) -> str:

@@ -1,0 +1,177 @@
+"""Named registry of the paper's experiment grid (+ beyond-paper scenarios).
+
+Each `Scenario` is a declarative grid over protocol x load x seed for one
+workload family. `cases()` expands a scenario into (label, SimConfig,
+FlowSet) triples that `sim.sweep.run_grid` executes with one compilation
+per protocol variant; `run()` is the one-call driver.
+
+Registry:
+  fig5_load_sweep         Fig. 5/16: BFC vs DCTCP across 50-90% load.
+  fig6_incast             Fig. 6/9: Google workload + 5% incast cross
+                          traffic, all realizable schemes vs Ideal-FQ.
+  table1_long_lived       Table 1: one long-lived flow vs variable cross
+                          traffic (probe throughput + short-flow tail).
+  websearch_tail          DCTCP WebSearch distribution at moderate/high
+                          load: heavy-tailed sizes stress tail latency.
+  rack_local_skew         Beyond-paper: 70% rack-local traffic; tests that
+                          backpressure does not penalize intra-rack flows
+                          when the core is quiet.
+  incast_plus_background  Beyond-paper: 10% incast on top of a 50-70%
+                          loaded fabric, incl. BFC's per-dest variant
+                          (queue exhaustion regime of Fig. 17).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .config import PRESETS, SimConfig
+from .topology import ClosParams, Topology, build
+from .workload import FlowSet, WorkloadParams, generate
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    workload: str = "fb_hadoop"
+    protos: Tuple[str, ...] = ("bfc",)
+    loads: Tuple[float, ...] = (0.6,)
+    seeds: Tuple[int, ...] = (0,)
+    n_flows: int = 1500
+    incast_load: float = 0.0
+    incast_degree: int = 20
+    incast_total_kb: int = 4000
+    locality: float = 0.0
+    long_lived: int = 0
+    long_lived_pkts: int = 1 << 24
+    drain_ticks: int = 20_000
+
+    def grid(self) -> List[Tuple[str, float, int]]:
+        return [(p, l, s) for p in self.protos for l in self.loads
+                for s in self.seeds]
+
+    def flowset(self, topo: Topology, load: float, seed: int,
+                n_flows: Optional[int] = None) -> FlowSet:
+        wp = WorkloadParams(workload=self.workload, load=load,
+                            incast_load=self.incast_load,
+                            incast_degree=self.incast_degree,
+                            incast_total_kb=self.incast_total_kb,
+                            locality=self.locality, seed=seed)
+        return generate(topo, wp, n_flows or self.n_flows,
+                        long_lived=self.long_lived,
+                        long_lived_pkts=self.long_lived_pkts)
+
+    def cases(self, topo: Topology, n_flows: Optional[int] = None,
+              protos: Optional[Sequence[str]] = None,
+              ) -> List[Tuple[str, SimConfig, FlowSet]]:
+        """Expand to (label, SimConfig, FlowSet); flow sets are generated
+        once per (load, seed) and shared across protocol variants."""
+        flowsets = {(l, s): self.flowset(topo, l, s, n_flows)
+                    for l in self.loads for s in self.seeds}
+        out = []
+        for p in (protos or self.protos):
+            cfg = SimConfig(proto=PRESETS[p], clos=topo.params)
+            for (l, s), fl in flowsets.items():
+                label = f"{self.name}/{p}_load{int(l * 100)}_seed{s}"
+                out.append((label, cfg, fl))
+        return out
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(sc: Scenario) -> Scenario:
+    if sc.name in SCENARIOS:
+        raise ValueError(f"duplicate scenario {sc.name!r}")
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+def get(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have {names()}") from None
+
+
+def names() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def run(name_or_scenario, clos: Optional[ClosParams] = None,
+        n_flows: Optional[int] = None, drain: Optional[int] = None,
+        unroll: int = 1):
+    """Run one registry scenario through the batched sweep subsystem.
+
+    Returns a list of sweep.CaseResult (one per grid point), each carrying
+    per-config SimState, emits, and summarized RunMetrics."""
+    from . import sweep
+    sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
+          else get(name_or_scenario))
+    topo = build(clos or ClosParams())
+    cases = sc.cases(topo, n_flows=n_flows)
+    return sweep.run_grid(topo, cases,
+                          drain=(drain if drain is not None
+                                 else sc.drain_ticks),
+                          unroll=unroll)
+
+
+# ---- the paper's grid --------------------------------------------------------
+register(Scenario(
+    name="fig5_load_sweep",
+    description="BFC vs DCTCP, Facebook-Hadoop sizes, 50-90% core load",
+    workload="fb_hadoop", protos=("bfc", "dctcp"),
+    loads=(0.5, 0.7, 0.8, 0.9), seeds=(16,)))
+
+register(Scenario(
+    name="fig6_incast",
+    description="Google workload + 5% incast cross traffic, all schemes",
+    workload="google", protos=("bfc", "hpcc", "dcqcn", "dctcp", "ideal_fq"),
+    loads=(0.55,), seeds=(9,), incast_load=0.05))
+
+register(Scenario(
+    name="fig10_noincast",
+    description="Google workload at 60% load, no incast, all schemes",
+    workload="google", protos=("bfc", "hpcc", "dcqcn", "dctcp", "ideal_fq"),
+    loads=(0.6,), seeds=(9,)))
+
+register(Scenario(
+    name="fig11_noincast",
+    description="Facebook-Hadoop sizes at 60% load, no incast",
+    workload="fb_hadoop", protos=("bfc", "hpcc", "dctcp", "ideal_fq"),
+    loads=(0.6,), seeds=(11,)))
+
+register(Scenario(
+    name="fig11_incast",
+    description="Facebook-Hadoop sizes + 5% incast cross traffic",
+    workload="fb_hadoop", protos=("bfc", "hpcc", "dctcp", "ideal_fq"),
+    loads=(0.55,), seeds=(11,), incast_load=0.05))
+
+register(Scenario(
+    name="table1_long_lived",
+    description="one long-lived flow vs variable cross traffic",
+    workload="fb_hadoop", protos=("bfc", "hpcc", "dcqcn", "hpcc_sfq"),
+    loads=(0.6,), seeds=(5,), long_lived=1, drain_ticks=60_000))
+
+register(Scenario(
+    name="websearch_tail",
+    description="DCTCP WebSearch sizes: heavy tail at moderate/high load",
+    workload="websearch", protos=("bfc", "hpcc", "dctcp"),
+    loads=(0.6, 0.8), seeds=(2, 3)))
+
+# ---- beyond the paper --------------------------------------------------------
+register(Scenario(
+    name="rack_local_skew",
+    description="70% rack-local traffic: backpressure must not hurt "
+                "intra-rack flows when the core is quiet",
+    workload="fb_hadoop", protos=("bfc", "dctcp"),
+    loads=(0.6, 0.8), seeds=(4,), locality=0.7))
+
+register(Scenario(
+    name="incast_plus_background",
+    description="10% incast over a loaded fabric; queue-exhaustion regime "
+                "for flow- vs dest-keyed BFC queues",
+    workload="google", protos=("bfc", "bfc_dest", "hpcc"),
+    loads=(0.5, 0.7), seeds=(6,), incast_load=0.10, incast_degree=40,
+    incast_total_kb=8000))

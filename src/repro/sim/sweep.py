@@ -1,0 +1,196 @@
+"""Batched experiment sweeps: one compiled simulator, a whole parameter grid.
+
+The paper's headline results are sweeps over protocol x workload x load x
+incast x seed. Compiling the ~700-line scan once per grid point dominated
+wall-clock; this module amortizes one XLA build across every grid point that
+shares a program signature (cf. the ns-3 sweep harnesses shipped with HPCC
+and BFC, which amortize one binary build over the whole grid).
+
+Padding contract
+----------------
+Workloads in a batch are padded to a common flow count ``F_max`` (rounded up
+to ``pad_multiple`` so differently-sized grids still hit the same compiled
+program). Padded "phantom" flows are inert by construction:
+
+* ``arrival_tick = engine.PHANTOM_ARRIVAL`` (2**30) — beyond any simulated
+  horizon, so a phantom never starts, is never eligible at the NIC, and
+  never transmits a packet;
+* ``size_pkts = 0`` — even if started it would have nothing to send;
+* ``routes = -1`` everywhere — a phantom is never looked up by any hop.
+
+Because phantoms never enter a queue, they never allocate physical queues,
+never touch the Bloom filters or the flow hash table, and never perturb any
+statistic: a padded run is bit-identical to the unpadded run of the same
+workload (tests/test_sim_padding.py), and a vmapped batch is bit-identical
+to the corresponding serial runs (tests/test_sim_sweep.py). The NIC's DRR
+arithmetic is padding-invariant because scores are order-isomorphic under a
+larger modulus when the extra lanes are ineligible.
+
+Compile-cache contract
+----------------------
+``engine.compiled_runner`` is keyed on (ClosParams, SimConfig, F, n_ticks,
+unroll, batched). One batched program is compiled per *protocol variant*
+(protocol flags are Python-level branches in the step, so e.g. BFC and DCTCP
+can never share a program); all seeds/loads/workloads of that variant ride
+the batch axis of a single compilation. `run_grid` therefore groups its
+cases by SimConfig and falls back to per-group (still batched) execution
+when a grid mixes protocol variants. `engine.trace_count()` counts actual
+XLA traces, which tests use to assert the one-compilation property.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine, metrics
+from .config import SimConfig
+from .engine import FlowOperands, SimState
+from .topology import MAX_HOPS, Topology
+from .workload import FlowSet
+
+# Default padding quantum for F_max: coarse enough that ragged grids share
+# compiled programs, fine enough not to waste memory on tiny sims.
+PAD_MULTIPLE = 64
+
+# SimState leaves carrying a per-flow axis (axis 0 after the batch axis is
+# selected away), used to trim padded state back to a workload's true F.
+_PER_FLOW_AXIS0 = {
+    "rem_src", "sent", "acked", "delivered", "done", "cwnd", "cwnd_ref",
+    "rate", "rate_target", "tokens", "alpha", "ack_seen", "mark_seen",
+    "cc_timer", "since_dec", "f_q", "f_cnt", "f_paused",
+}
+_PER_FLOW_AXIS1 = {"ack_ring", "mark_ring", "u_ring", "retx_ring"}
+
+
+def pad_flowset(flows: FlowSet, f_max: int) -> FlowSet:
+    """Append inert phantom flows until the set holds `f_max` flows."""
+    pad = f_max - flows.n_flows
+    if pad < 0:
+        raise ValueError(f"f_max={f_max} < n_flows={flows.n_flows}")
+    if pad == 0:
+        return flows
+    return FlowSet(
+        src=np.concatenate([np.asarray(flows.src, np.int32),
+                            np.zeros(pad, np.int32)]),
+        dst=np.concatenate([np.asarray(flows.dst, np.int32),
+                            np.zeros(pad, np.int32)]),
+        size_pkts=np.concatenate([np.asarray(flows.size_pkts, np.int32),
+                                  np.zeros(pad, np.int32)]),
+        arrival_tick=np.concatenate(
+            [np.asarray(flows.arrival_tick, np.int32),
+             np.full(pad, engine.PHANTOM_ARRIVAL, np.int32)]),
+        routes=np.concatenate([np.asarray(flows.routes, np.int32),
+                               np.full((pad, MAX_HOPS), -1, np.int32)]),
+        ideal_fct=np.concatenate([np.asarray(flows.ideal_fct, np.int32),
+                                  np.ones(pad, np.int32)]),
+        fid=np.concatenate([np.asarray(flows.fid, np.int32),
+                            np.zeros(pad, np.int32)]),
+        is_incast=np.concatenate([np.asarray(flows.is_incast, bool),
+                                  np.zeros(pad, bool)]),
+        horizon=flows.horizon)
+
+
+def padded_count(flowsets: Sequence[FlowSet],
+                 pad_multiple: int = PAD_MULTIPLE) -> int:
+    f_max = max(f.n_flows for f in flowsets)
+    return int(-(-max(f_max, 1) // pad_multiple) * pad_multiple)
+
+
+def stack_operands(flowsets: Sequence[FlowSet], cfg: SimConfig,
+                   f_max: int) -> FlowOperands:
+    """Pad every FlowSet to `f_max` and stack operands on a batch axis."""
+    packed = [engine.pack_flows(pad_flowset(f, f_max), cfg)
+              for f in flowsets]
+    return FlowOperands(*[jnp.stack(leaves) for leaves in zip(*packed)])
+
+
+def trim_state(state: SimState, n_flows: int) -> SimState:
+    """Trim the per-flow leaves of an (unbatched) SimState to `n_flows`,
+    dropping the phantom-flow tail a padded run carries."""
+    out = {}
+    for name, leaf in state._asdict().items():
+        v = np.asarray(leaf)
+        if name in _PER_FLOW_AXIS0:
+            v = v[:n_flows]
+        elif name in _PER_FLOW_AXIS1:
+            v = v[:, :n_flows]
+        out[name] = v
+    return SimState(**out)
+
+
+def select_config(batched_state: SimState, k: int,
+                  n_flows: Optional[int] = None) -> SimState:
+    """Extract config `k` from a batched SimState, trimming per-flow leaves
+    back to the workload's true flow count so it is leaf-for-leaf comparable
+    with an unpadded serial `engine.run`."""
+    lane = SimState(**{name: np.asarray(leaf)[k]
+                       for name, leaf in batched_state._asdict().items()})
+    return trim_state(lane, n_flows) if n_flows is not None else lane
+
+
+def run_batch(topo: Topology, flowsets: Sequence[FlowSet], cfg: SimConfig,
+              n_ticks: int, unroll: int = 1,
+              pad_multiple: int = PAD_MULTIPLE):
+    """Run K workloads under one protocol config as a single vmapped,
+    jitted program. Returns (batched_state, emits[K, T, 3]); use
+    `select_config` to view one lane."""
+    f_max = padded_count(flowsets, pad_multiple)
+    n_ticks = int(np.ceil(n_ticks / unroll) * unroll)
+    go = engine.compiled_runner(topo.params, cfg, f_max, n_ticks, unroll,
+                                batched=True)
+    st, emits = go(stack_operands(flowsets, cfg, f_max))
+    return jax.device_get(st), np.asarray(emits)
+
+
+@dataclass
+class CaseResult:
+    """One grid point of a sweep, unpacked back to host."""
+    label: str
+    proto: str
+    cfg: SimConfig
+    flows: FlowSet
+    state: SimState            # per-flow leaves trimmed to flows.n_flows
+    emits: np.ndarray          # (T, 3)
+    metrics: Optional[metrics.RunMetrics] = None
+
+
+def run_grid(topo: Topology,
+             cases: Sequence[Tuple[str, SimConfig, FlowSet]],
+             n_ticks: Optional[int] = None, drain: int = 20_000,
+             unroll: int = 1, pad_multiple: int = PAD_MULTIPLE,
+             summarize: bool = True) -> List[CaseResult]:
+    """Run an arbitrary (label, SimConfig, FlowSet) grid.
+
+    Cases are grouped by SimConfig: each group runs as ONE vmapped
+    compilation (the serial fallback across protocol variants — their
+    Python-level branches produce different programs by construction).
+    All groups share `n_ticks` (default: max horizon + drain) so same-shaped
+    protocol groups can still share executables across calls."""
+    if n_ticks is None:
+        n_ticks = int(max(f.horizon for _, _, f in cases) + drain)
+    groups: Dict[SimConfig, List[int]] = {}
+    for i, (_, cfg, _) in enumerate(cases):
+        groups.setdefault(cfg, []).append(i)
+
+    results: List[Optional[CaseResult]] = [None] * len(cases)
+    for cfg, idxs in groups.items():
+        flowsets = [cases[i][2] for i in idxs]
+        st, emits = run_batch(topo, flowsets, cfg, n_ticks, unroll,
+                              pad_multiple)
+        for k, i in enumerate(idxs):
+            label, _, flows = cases[i]
+            state_k = select_config(st, k, flows.n_flows)
+            m = None
+            if summarize:
+                m = metrics.summarize(
+                    label, state_k, emits[k], flows, n_links=topo.n_ports,
+                    occ_bin_ref=topo.params.switch_buffer_pkts,
+                    cap=cfg.proto.queue_cap)
+            results[i] = CaseResult(label=label, proto=cfg.proto.name,
+                                    cfg=cfg, flows=flows, state=state_k,
+                                    emits=emits[k], metrics=m)
+    return results

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro.checkpoint import io
 from repro.checkpoint.manager import CheckpointManager
 

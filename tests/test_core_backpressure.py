@@ -1,6 +1,11 @@
 """Properties of the BFC control law (§3.3.2)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.backpressure import (BackpressureParams, pause_threshold,

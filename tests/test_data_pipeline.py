@@ -6,6 +6,10 @@ import numpy as np
 from repro.data.pipeline import BackpressureQueue, batches
 from repro.data.tokens import SyntheticCorpus
 
+import pytest
+
+pytestmark = pytest.mark.tier1
+
 
 def test_corpus_deterministic_and_seekable():
     c = SyntheticCorpus(vocab=128, seed=3)

@@ -4,6 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.tier1
+pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro import configs
 from repro.models import model, nn
 from repro.optim import adamw

@@ -3,6 +3,10 @@ import numpy as np
 
 from repro.launch import roofline
 
+import pytest
+
+pytestmark = pytest.mark.tier1
+
 
 HLO_SAMPLE = """
 HloModule jit_step

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro import configs
 from repro.models import model
 from repro.runtime import serving

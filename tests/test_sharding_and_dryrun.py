@@ -6,6 +6,8 @@ import subprocess
 import sys
 
 import pytest
+
+pytestmark = pytest.mark.tier1
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
@@ -65,6 +67,7 @@ print("RESULT", json.dumps({{"flops": rec["flops_per_chip"],
 """
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("granite-moe-1b-a400m", "train_4k"),
     ("gemma3-1b", "decode_32k"),
@@ -102,6 +105,7 @@ print("PIPELINE_OK")
 """
 
 
+@pytest.mark.slow
 def test_pipeline_shardmap_executor():
     """The distributed (one-device-per-stage, ppermute) pipeline executor
     matches sequential stage application."""

@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro.sim import engine, metrics, topology, workload
 from repro.sim.config import (BFC, BFC_STOCHASTIC, DCTCP, IDEAL_FQ,
                               SimConfig)

@@ -1,0 +1,92 @@
+"""Padding semantics: phantom flows are inert by construction.
+
+Property-test over randomized small topologies/workloads (seeded rng in
+place of hypothesis so the suite never depends on it): padding a FlowSet
+with phantom flows must never transmit a packet, never allocate a queue,
+and never perturb Bloom-filter, flow-table, or any other simulator state —
+the padded run is bit-identical to the unpadded one."""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+from repro.sim import engine, sweep, topology, workload
+from repro.sim.config import BFC, DCTCP, SimConfig
+from repro.sim.topology import ClosParams
+
+
+def _random_setup(seed):
+    rng = np.random.default_rng(seed)
+    n_tor = int(rng.choice([2, 4]))
+    n_spine = int(rng.choice([2, 3]))
+    per_tor = int(rng.choice([4, 8]))
+    clos = ClosParams(n_servers=n_tor * per_tor, n_tor=n_tor,
+                      n_spine=n_spine, switch_buffer_pkts=2048)
+    topo = topology.build(clos)
+    wp = workload.WorkloadParams(
+        workload=str(rng.choice(["fb_hadoop", "uniform"])),
+        load=float(rng.uniform(0.3, 0.7)),
+        incast_load=float(rng.choice([0.0, 0.05])),
+        incast_degree=4, incast_total_kb=400, seed=int(rng.integers(1e6)))
+    n_flows = int(rng.integers(20, 60))
+    flows = workload.generate(topo, wp, n_flows)
+    pad = int(rng.integers(1, 64))
+    return clos, topo, flows, flows.n_flows + pad
+
+
+def _assert_phantoms_inert(seed, proto):
+    clos, topo, flows, f_padded = _random_setup(seed)
+    cfg = SimConfig(proto=proto, clos=clos)
+    n_ticks = int(flows.horizon + 2000)
+
+    padded = sweep.pad_flowset(flows, f_padded)
+    st_p, em_p = engine.run(topo, padded, cfg, n_ticks)
+    st_u, em_u = engine.run(topo, flows, cfg, n_ticks)
+
+    F = flows.n_flows
+    # phantoms never transmit, never complete, never hold queue state
+    assert np.asarray(st_p.sent)[F:].sum() == 0
+    assert np.asarray(st_p.delivered)[F:].sum() == 0
+    assert (np.asarray(st_p.done)[F:] == -1).all()
+    assert np.asarray(st_p.f_cnt)[F:].sum() == 0
+    assert (np.asarray(st_p.f_q)[F:] == -1).all()
+    assert not np.asarray(st_p.f_paused)[F:].any()
+
+    # ... and never perturb anything else: bit-identical state + emits
+    assert np.array_equal(em_p, em_u)
+    st_p = sweep.trim_state(st_p, F)
+    st_u = sweep.trim_state(st_u, F)
+    for name in st_u._fields:
+        assert np.array_equal(np.asarray(getattr(st_p, name)),
+                              np.asarray(getattr(st_u, name))), \
+            f"SimState.{name} perturbed by padding (seed={seed})"
+
+
+def test_phantom_flows_are_inert_smoke():
+    """One representative draw stays tier-1 so padding inertness always
+    gates; the wider property matrix runs in the slow set."""
+    _assert_phantoms_inert(0, BFC)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed,proto", [
+    (1, BFC), (2, BFC), (0, DCTCP)],
+    ids=["bfc-1", "bfc-2", "dctcp-0"])
+def test_phantom_flows_are_inert_property(seed, proto):
+    _assert_phantoms_inert(seed, proto)
+
+
+def test_pad_flowset_shapes():
+    clos = ClosParams(n_servers=8, n_tor=2, n_spine=2,
+                      switch_buffer_pkts=1024)
+    topo = topology.build(clos)
+    flows = workload.generate(
+        topo, workload.WorkloadParams(workload="uniform", seed=3), 10)
+    padded = sweep.pad_flowset(flows, 32)
+    assert padded.n_flows == 32
+    assert (padded.arrival_tick[10:] == engine.PHANTOM_ARRIVAL).all()
+    assert (padded.size_pkts[10:] == 0).all()
+    assert (padded.routes[10:] == -1).all()
+    with pytest.raises(ValueError):
+        sweep.pad_flowset(flows, 5)
+    assert sweep.pad_flowset(flows, 10) is flows

@@ -1,0 +1,101 @@
+"""Batched sweep subsystem: one compilation per grid, bit-identical to
+serial runs, and packet conservation across registry scenarios."""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+from repro.sim import engine, scenarios, sweep, topology, workload
+from repro.sim.config import BFC, PRESETS, SimConfig
+from repro.sim.topology import ClosParams
+
+CLOS = ClosParams(n_servers=16, n_tor=2, n_spine=2, switch_buffer_pkts=2048)
+
+
+@pytest.fixture(scope="module")
+def tiny_topo():
+    return topology.build(CLOS)
+
+
+def _fb_grid(topo, loads=(0.4, 0.6), seeds=(1, 2, 3, 4), n_flows=60):
+    return [workload.generate(
+                topo, workload.WorkloadParams(workload="fb_hadoop",
+                                              load=load, seed=seed),
+                n_flows)
+            for load in loads for seed in seeds]
+
+
+@pytest.mark.slow
+def test_grid_one_compilation_and_bitwise_match(tiny_topo):
+    """Acceptance: a 4-seed x 2-load fb_hadoop sweep through sim/sweep.py
+    triggers exactly ONE XLA compilation and matches per-config serial
+    `engine.run` results bit-for-bit on every SimState leaf + emits.
+    (slow: the 8 serial reference re-runs dominate; the one-compilation
+    property alone is covered tier-1 by test_serial_runs_share_one_...)"""
+    topo = tiny_topo
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    flowsets = _fb_grid(topo)
+    assert len(flowsets) == 8
+    n_ticks = int(max(f.horizon for f in flowsets) + 3000)
+
+    before = engine.trace_count()
+    st_b, em_b = sweep.run_batch(topo, flowsets, cfg, n_ticks)
+    assert engine.trace_count() - before == 1, \
+        "the whole 8-point grid must compile exactly once"
+
+    for k, flows in enumerate(flowsets):
+        st_s, em_s = engine.run(topo, flows, cfg, n_ticks)
+        st_k = sweep.select_config(st_b, k, flows.n_flows)
+        st_s = sweep.trim_state(st_s, flows.n_flows)  # no-op shape align
+        assert np.array_equal(em_b[k], em_s), f"emits differ in lane {k}"
+        for name in st_s._fields:
+            a = np.asarray(getattr(st_s, name))
+            b = np.asarray(getattr(st_k, name))
+            assert np.array_equal(a, b), \
+                f"SimState.{name} differs in lane {k}"
+
+
+def test_serial_runs_share_one_compilation(tiny_topo):
+    """Same-shaped serial runs reuse the cached executable (no per-seed
+    recompiles)."""
+    topo = tiny_topo
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    flowsets = _fb_grid(topo, loads=(0.5,), seeds=(7, 8))
+    before = engine.trace_count()
+    for flows in flowsets:
+        engine.run(topo, flows, cfg, n_ticks=2000)
+    assert engine.trace_count() - before <= 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario_name", [
+    "fig5_load_sweep", "websearch_tail", "rack_local_skew"])
+def test_conservation_across_registry_scenarios(scenario_name):
+    """Packet conservation on every grid point of >= 3 registry scenarios:
+    sent - delivered - queued - in-flight - pending-retx == 0 (exact at any
+    tick; the retx term is empty at quiescence)."""
+    sc = scenarios.get(scenario_name)
+    # shrink: one load, one seed per scenario, both protocol groups
+    from dataclasses import replace
+    sc = replace(sc, loads=sc.loads[:1], seeds=sc.seeds[:1],
+                 protos=sc.protos[:2])
+    results = scenarios.run(sc, clos=CLOS, n_flows=50, drain=4000)
+    assert len(results) == 2
+    for r in results:
+        st = r.state
+        sent = int(np.asarray(st.sent).sum())
+        delivered = int(np.asarray(st.delivered).sum())
+        queued = int(np.asarray(st.f_cnt).sum())
+        inflight = int((np.asarray(st.wire_f) >= 0).sum())
+        retx_pending = int(np.asarray(st.retx_ring).sum())
+        assert sent - delivered - queued - inflight - retx_pending == 0, \
+            r.label
+        assert (np.asarray(st.delivered) <= r.flows.size_pkts).all(), r.label
+        done = np.asarray(st.done)
+        assert (done >= 0).mean() > 0.9, f"{r.label}: too few completed"
+
+
+def test_padded_count_rounds_up(tiny_topo):
+    flowsets = _fb_grid(tiny_topo, loads=(0.5,), seeds=(1,), n_flows=70)
+    assert sweep.padded_count(flowsets, pad_multiple=64) == 128
+    assert sweep.padded_count(flowsets, pad_multiple=1) == 70

@@ -3,6 +3,8 @@ serves, and the paper's core claim holds in the simulator."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro import configs
 from repro.runtime import train
 from repro.sim import engine, metrics, topology, workload
@@ -10,6 +12,7 @@ from repro.sim.config import BFC, BFC_STOCHASTIC, SimConfig
 from repro.sim.topology import ClosParams
 
 
+@pytest.mark.slow
 def test_tiny_training_learns(tmp_path):
     """~60-step run on the learnable synthetic corpus: loss must drop
     substantially (the markov structure is recoverable)."""
@@ -24,6 +27,7 @@ def test_tiny_training_learns(tmp_path):
     assert rep.skipped_nonfinite == 0
 
 
+@pytest.mark.slow
 def test_restart_resumes_not_restarts(tmp_path):
     """After a mid-run failure the driver continues from the checkpoint:
     total optimizer steps executed ~ steps + (fail - last_ckpt), never 2x."""
