@@ -67,14 +67,16 @@ def make_flows(load=0.6, incast_load=0.0, incast_degree=100,
 
 def run_scenario(name_or_scenario, **overrides):
     """Run a registry scenario through the batched sweep subsystem at this
-    harness's scale. At FULL (paper) scale, scenarios that kept the default
-    (shrunk) incast use the paper's 100-to-1 degree; scenarios with
-    deliberately tuned incast parameters are left alone."""
+    harness's scale (scenarios with their own `topologies` axis pin their
+    fabrics; CLOS covers the rest). At FULL (paper) scale, scenarios that
+    kept the default (shrunk) incast use the paper's 100-to-1 degree;
+    scenarios with a degree axis or deliberately tuned incast parameters
+    are left alone."""
     from dataclasses import replace
     from repro.sim import scenarios
     sc = (name_or_scenario if not isinstance(name_or_scenario, str)
           else scenarios.get(name_or_scenario))
-    if (FULL and sc.incast_load > 0
+    if (FULL and sc.incast_load > 0 and not sc.incast_degrees
             and sc.incast_degree == scenarios.Scenario.incast_degree
             and sc.incast_total_kb == scenarios.Scenario.incast_total_kb):
         sc = replace(sc, incast_degree=100, incast_total_kb=20480)

@@ -13,7 +13,7 @@ import numpy as np
 from .common import (CLOS, DRAIN, FULL, N_FLOWS, emit, emit_fct_table,
                      make_flows, run_proto, run_scenario)
 from repro.sim import metrics as sim_metrics
-from repro.sim import scenarios, sweep, topology
+from repro.sim import scenarios, topology
 from repro.sim.config import PRESETS, ProtoConfig, SimConfig
 from repro.sim.topology import ClosParams
 from dataclasses import replace
@@ -117,27 +117,43 @@ def fig16_load_sweep():
 
 def fig17_incast_degree():
     """Fig. 17: incast degree sweep; BFC + per-dest FQ avoids queue
-    exhaustion at extreme degrees. The three degrees of each protocol batch
-    into one compiled program via sweep.run_grid."""
-    degrees = (10, 30, 60)
-    topo = topology.build(CLOS)
-    flowsets = {}
-    for degree in degrees:
-        _, flowsets[degree] = make_flows(load=0.55, incast_load=0.05,
-                                         incast_degree=degree,
-                                         incast_total_kb=degree * 200,
-                                         seed=17)
-    cases = [(f"fig17_{proto}_deg{deg}",
-              SimConfig(proto=PRESETS[proto], clos=CLOS), flowsets[deg])
-             for proto in ("bfc", "bfc_dest", "hpcc") for deg in degrees]
+    exhaustion at extreme degrees. The whole degree axis (4-64) comes from
+    the `fig17_incast_degree` registry entry; all five degrees of each
+    protocol batch into one compiled program via the sweep subsystem."""
+    sc = scenarios.get("fig17_incast_degree")
     p99 = {}
-    for r in sweep.run_grid(topo, cases, drain=DRAIN):
-        p99[r.label] = r.metrics.fct_slowdown_p99
-        emit(r.label, "p99_slowdown", round(r.metrics.fct_slowdown_p99, 2))
-    for degree in degrees:
+    for r in run_scenario(sc):
+        deg = int(r.label.rsplit("deg", 1)[1].split("_")[0])
+        p99[(r.proto, deg)] = r.metrics.fct_slowdown_p99
+        emit(r.label.replace("/", "_"), "p99_slowdown",
+             round(r.metrics.fct_slowdown_p99, 2))
+    for degree in sc.incast_degrees:
         emit(f"fig17_deg{degree}",
              "validates_paper(BFC beats HPCC at all degrees)",
-             p99[f"fig17_bfc_deg{degree}"] <= p99[f"fig17_hpcc_deg{degree}"])
+             p99[("bfc", degree)] <= p99[("hpcc", degree)])
+
+
+def topology_sweeps():
+    """Beyond the paper's figures: the two topology-axis registry entries.
+    Every fabric of a protocol variant rides the batch axis of ONE compiled
+    program (spine-count lanes are padded to a common port count; buffer
+    lanes differ only in the traced `buffer_limit` operand)."""
+    from repro.sim import engine as sim_engine
+    before = sim_engine.trace_count()
+    p99 = {}
+    for name in ("oversub_sweep", "buffer_sweep"):
+        for r in run_scenario(name):
+            emit(r.label.replace("/", "_"), "p99_slowdown",
+                 round(r.metrics.fct_slowdown_p99, 2))
+            emit(r.label.replace("/", "_"), "drops", r.metrics.drops)
+            p99[r.label] = r.metrics.fct_slowdown_p99
+    emit("topology_sweeps", "xla_compilations",
+         sim_engine.trace_count() - before)
+    oversub = {k: v for k, v in p99.items() if k.startswith("oversub")}
+    bfc_w = sum(1 for k, v in oversub.items() if "/bfc_" in k and
+                v <= oversub.get(k.replace("/bfc_", "/dctcp_"), v))
+    emit("oversub_sweep", "validates_paper(BFC >= DCTCP per fabric)",
+         bfc_w == sum(1 for k in oversub if "/bfc_" in k))
 
 
 def fig18_queue_count():
@@ -283,7 +299,7 @@ def websearch_tail():
 
 ALL = [fig3_4_buffer_occupancy_vs_speed, fig5_table1_long_flow,
        fig9_10_google_main, fig11_facebook, fig12_srf_scheduling,
-       fig16_load_sweep, fig17_incast_degree, fig18_queue_count,
-       fig19_stochastic_vs_dynamic, fig20_buffer_optimization,
-       fig21_incast_flow_fct, fig23_24_resource_sensitivity,
-       websearch_tail]
+       fig16_load_sweep, fig17_incast_degree, topology_sweeps,
+       fig18_queue_count, fig19_stochastic_vs_dynamic,
+       fig20_buffer_optimization, fig21_incast_flow_fct,
+       fig23_24_resource_sensitivity, websearch_tail]

@@ -13,15 +13,28 @@ import traceback
 
 
 def run_scenarios(which: str) -> None:
+    """Nightly mode: run registry scenarios through the batched sweep and
+    make compile-count regressions visible — each scenario reports its grid
+    size and XLA trace delta (which must stay at the number of protocol
+    variants, never scale with topologies/loads/degrees/seeds), and the
+    run ends with the total `engine.trace_count()`."""
     from .common import emit, emit_fct_table, run_scenario
     from repro.sim import engine, scenarios
     names = scenarios.names() if which == "all" else [which]
+    grid_points = 0
     for name in names:
         print(f"# === scenario {name} ===", flush=True)
         t0 = time.time()
-        for r in run_scenario(name):
+        before = engine.trace_count()
+        results = run_scenario(name)
+        grid_points += len(results)
+        for r in results:
             emit_fct_table(r.label.replace("/", "_"), r.metrics)
+        emit(f"scenario_{name}", "grid_points", len(results))
+        emit(f"scenario_{name}", "xla_compilations",
+             engine.trace_count() - before)
         emit(f"scenario_{name}", "wall_s", round(time.time() - t0, 1))
+    emit("scenarios", "grid_points_total", grid_points)
     emit("scenarios", "xla_compilations", engine.trace_count())
 
 

@@ -1,10 +1,13 @@
-"""The whole paper grid, one compiled simulator per protocol variant.
+"""The whole paper grid — topologies included — in one compiled simulator
+per protocol variant.
 
-Runs a miniature multi-seed, multi-load slice of the experiment registry
-(`repro.sim.scenarios`) through the batched sweep subsystem: every grid
-point of a protocol rides the batch axis of ONE vmapped XLA program, and
-the FCT-slowdown percentile table is aggregated on device — no per-config
-recompiles, no per-config host round-trips.
+Runs a miniature multi-TOPOLOGY, multi-seed slice of the experiment
+registry (`repro.sim.scenarios`) through the batched sweep subsystem:
+every grid point of a protocol — three fabrics with different spine
+counts and buffer depths, two seeds each — rides the batch axis of ONE
+vmapped XLA program. Mixed fabrics are padded to a common `TopoDims`
+(phantom ports/switches are inert), so compilation cost scales with the
+number of protocol variants only, never with the grid.
 
     PYTHONPATH=src python examples/sweep_grid.py
 """
@@ -14,44 +17,46 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.sim import engine, metrics, scenarios, sweep, topology
-from repro.sim.config import PRESETS, SimConfig
+from repro.sim import engine, scenarios, sweep, topology
 from repro.sim.topology import ClosParams
 
 
 def main():
-    clos = ClosParams(n_servers=16, n_tor=2, n_spine=2,
-                      switch_buffer_pkts=2048)
-    topo = topology.build(clos)
+    fabrics = (ClosParams(n_servers=16, n_tor=2, n_spine=2,
+                          switch_buffer_pkts=2048),     # 4:1 oversub
+               ClosParams(n_servers=16, n_tor=2, n_spine=4,
+                          switch_buffer_pkts=2048),     # 2:1 oversub
+               ClosParams(n_servers=16, n_tor=2, n_spine=4,
+                          switch_buffer_pkts=512))      # shallow buffer
+    sc = scenarios.Scenario(
+        name="demo_topo_grid",
+        description="websearch load on three fabrics",
+        workload="websearch", protos=("bfc", "dctcp"),
+        loads=(0.6,), seeds=(2, 3), n_flows=120, topologies=fabrics)
 
-    # a shrunk websearch_tail grid: per protocol, 2 loads x 2 seeds = 4
-    # simulations batched into a single vmapped XLA program
-    sc = scenarios.get("websearch_tail")
-    protos = ("bfc", "dctcp")
-    grid = [(load, seed) for load in sc.loads for seed in sc.seeds]
-    flowsets = [sc.flowset(topo, load, seed, n_flows=120)
-                for load, seed in grid]
-    n_ticks = int(max(f.horizon for f in flowsets) + 4000)
-    print(f"scenario {sc.name}: {len(protos) * len(grid)} grid points "
-          f"({len(protos)} protocol variants x {len(sc.loads)} loads x "
-          f"{len(sc.seeds)} seeds), {n_ticks} ticks each\n")
+    topo = topology.build(fabrics[0])
+    cases = sc.cases(topo)
+    n_points = len(cases)
+    print(f"scenario {sc.name}: {n_points} grid points "
+          f"({len(sc.protos)} protocol variants x {len(fabrics)} fabrics "
+          f"x {len(sc.seeds)} seeds)\n")
 
     t0 = time.time()
-    print(f"{'grid point':>28} {'p50':>7} {'p95':>7} {'p99':>7}")
-    for proto in protos:
-        cfg = SimConfig(proto=PRESETS[proto], clos=clos)
-        st, _ = sweep.run_batch(topo, flowsets, cfg, n_ticks)
-        table = metrics.slowdown_table(st, flowsets)   # device-side agg
-        for (load, seed), row in zip(grid, table):
-            p50, p95, p99 = row[0]                     # row 0 = all sizes
-            label = f"{proto}_load{int(load * 100)}_seed{seed}"
-            print(f"{label:>28} {p50:>7.2f} {p95:>7.2f} {p99:>7.2f}")
+    before = engine.trace_count()
+    results = sweep.run_grid(topo, cases, drain=4000)
+    print(f"{'grid point':>42} {'p50':>7} {'p95':>7} {'p99':>7}")
+    for r in results:
+        m = r.metrics
+        print(f"{r.label.split('/', 1)[1]:>42} "
+              f"{m.fct_slowdown_p50:>7.2f} {m.fct_slowdown_p95:>7.2f} "
+              f"{m.fct_slowdown_p99:>7.2f}")
 
-    print(f"\n{len(protos) * len(grid)} simulations, "
-          f"{engine.trace_count()} XLA compilations, "
+    print(f"\n{n_points} simulations on {len(fabrics)} distinct fabrics, "
+          f"{engine.trace_count() - before} XLA compilations, "
           f"{time.time() - t0:.1f}s wall")
-    print("BFC holds the websearch tail near ideal across the grid; "
-          "compilation cost no longer scales with grid size.")
+    print("Topology is a traced operand: spine count and buffer depth ride "
+          "the batch axis, so compilation cost no longer scales with the "
+          "grid — only with the protocol list.")
 
 
 if __name__ == "__main__":

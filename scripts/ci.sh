@@ -10,8 +10,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 case "${1:-tier1}" in
-  tier1) exec python -m pytest -x -q -m "not slow" ;;
+  tier1) python scripts/trace_guard.py
+         exec python -m pytest -x -q -m "not slow" ;;
   slow)  exec python -m pytest -q -m "slow" ;;
-  all)   exec python -m pytest -x -q ;;
+  all)   python scripts/trace_guard.py
+         exec python -m pytest -x -q ;;
   *)     echo "usage: $0 [tier1|slow|all]" >&2; exit 2 ;;
 esac

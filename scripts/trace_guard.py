@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Tier-1 compile-count guard: a 2-topology x 2-seed mini-grid through the
+batched sweep subsystem must trigger exactly ONE XLA trace.
+
+Topology is a traced operand (`TopoOperands`) of one compiled simulator, so
+compilation cost scales with the number of protocol variants only — never
+with topologies, seeds, or loads. This script is the cheap canary
+scripts/ci.sh runs on every tier-1 invocation; the full bit-identity
+matrix lives in tests/test_sim_topo_sweep.py."""
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sim import engine, sweep, topology, workload  # noqa: E402
+from repro.sim.config import BFC, SimConfig  # noqa: E402
+from repro.sim.topology import ClosParams  # noqa: E402
+
+
+def main() -> None:
+    fabrics = (ClosParams(n_servers=8, n_tor=2, n_spine=2,
+                          switch_buffer_pkts=512),
+               ClosParams(n_servers=12, n_tor=2, n_spine=3,
+                          switch_buffer_pkts=1024))
+    seeds = (1, 2)
+    cases = []
+    for clos in fabrics:
+        topo = topology.build_cached(clos)
+        for seed in seeds:
+            flows = workload.generate(
+                topo, workload.WorkloadParams(workload="uniform", load=0.5,
+                                              seed=seed), 24)
+            cases.append((f"guard_{clos.n_spine}sp_s{seed}",
+                          SimConfig(proto=BFC, clos=clos), flows))
+
+    before = engine.trace_count()
+    results = sweep.run_grid(topology.build_cached(fabrics[0]), cases,
+                             n_ticks=512, summarize=False)
+    traces = engine.trace_count() - before
+    assert len(results) == 4
+    assert all(r.state is not None for r in results)
+    if traces != 1:
+        print(f"TRACE GUARD FAILED: {len(cases)}-case 2-topology grid "
+              f"compiled {traces}x (expected exactly 1). A compile-cache "
+              "key or operand regressed into a closure constant.")
+        sys.exit(1)
+    print(f"trace guard ok: {len(cases)} grid points "
+          f"(2 topologies x 2 seeds), {traces} XLA trace")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,38 +5,20 @@ egress port transmits at most one MTU packet per tick, packets propagate on
 "wires" with a fixed tick delay, switches run the configured protocol
 (BFC / PFC / DCTCP / DCQCN / HPCC / Ideal-FQ and the paper's ablations).
 
-Design notes
-------------
-* Flow metadata (routes, sizes, arrivals, hash positions, ...) is a traced
-  operand (`FlowOperands`), NOT a closure constant: every workload with the
-  same padded flow count F reuses one compiled program, and `sim/sweep.py`
-  vmaps the step over a leading batch axis to run a whole parameter grid in
-  a single XLA compilation. Only the topology tables and the protocol/timing
-  configuration remain compile-time constants.
-* All switch state is dense: per-(port, queue) ring buffers of packet records,
-  per-(flow, hop) assignment/pause state, per-port Bloom filters. Multiple
-  same-tick arrivals at one egress port are serialized with O(P^2) pairwise
-  rank computations (P = total ports, a few hundred), which XLA vectorizes.
-* Masked scatters use out-of-bounds indices (JAX drops OOB scatter writes),
-  so disabled lanes never race with enabled ones.
-* Transmissions happen *before* arrival processing each tick, so a packet
-  arriving at an empty queue waits >= 1 tick (store-and-forward, conservative).
-* Feedback (ACKs / ECN echo / HPCC INT) is modeled as delayed per-flow
-  counters on ring buffers; ACK paths are not subject to data-plane queueing.
-* Phase order per tick:
-    0. derived state (occupancy, N_active, thresholds, pause bits)
-    1. tau-boundary control work (resume <=1 flow per queue, rotate Bloom
-       filter pipeline: counts -> in-flight snapshot -> applied snapshot)
-    2. switch transmissions (DRR/SRF over unpaused queues)
-    3. NIC transmissions (DRR over eligible flows per server)
-    4. arrival processing (deliveries, enqueues, queue assignment, ECN,
-       BFC pause decisions, PFC accounting, drops)
-    5. feedback consumption + congestion-control law updates
-    6. statistics
+This module owns the operand/state definitions and the compile cache; the
+per-tick work lives in the phase pipeline under `repro.sim.phases`
+(derive -> control -> switch_tx -> nic_tx -> arrivals -> feedback -> stats).
+See docs/ARCHITECTURE.md for the full design: the phase pipeline, the two
+traced operand bundles (`FlowOperands` here, `topology.TopoOperands`), and
+both padding contracts (phantom flows, phantom ports/switches/servers) that
+let `sim/sweep.py` vmap a whole topology x workload x seed grid through one
+compiled program. Only `TopoDims` (port/server/switch counts, wire length)
+and the protocol/timing configuration remain compile-time constants.
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import replace
 from typing import NamedTuple
 
 import jax
@@ -44,14 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import bloom
-from ..core.hashing import hash_u32
 from ..core.flow_table import FlowTableParams, buckets_of
+from . import phases
 from .config import SimConfig
-from .topology import Topology, MAX_HOPS
-from .workload import FlowSet
-
-I32 = jnp.int32
-BIG = np.int32(1 << 20)  # large-but-packable sentinel for priority keys
+from .phases import BIG, I32  # noqa: F401  (re-export for callers/tests)
+from .topology import TopoDims, Topology, pack_topo
 
 # Arrival tick of padded "phantom" flows (sweep batching): beyond any
 # simulated horizon, so they never start, never transmit, never allocate.
@@ -63,7 +42,9 @@ class FlowOperands(NamedTuple):
 
     Shapes are static per compiled program: (F,) / (F, MAX_HOPS) / (F, S).
     `sim/sweep.py` stacks these along a leading batch axis and vmaps the
-    step, so one compilation serves a whole seed/load grid."""
+    step, so one compilation serves a whole seed/load grid. Routes name
+    egress ports of the lane's own fabric, so the per-flow routing table
+    doubles as the topology's routing operand."""
     routes: jnp.ndarray      # (F, H) egress port per hop, -1 padded
     src: jnp.ndarray         # (F,) source server
     dst: jnp.ndarray         # (F,) destination server
@@ -75,7 +56,7 @@ class FlowOperands(NamedTuple):
     fb_delay: jnp.ndarray    # (F,) one-way feedback delay in ticks
 
 
-def pack_flows(flows: FlowSet, cfg: SimConfig) -> FlowOperands:
+def pack_flows(flows, cfg: SimConfig) -> FlowOperands:
     """Derive the traced operand bundle for a FlowSet under `cfg`."""
     bparams = bloom.BloomParams(cfg.bloom_stages, cfg.bloom_stage_bits)
     ftp = FlowTableParams(cfg.ft_buckets, cfg.ft_bucket_size)
@@ -161,85 +142,19 @@ class SimState(NamedTuple):
     qlen_hist: jnp.ndarray         # (BINS,) physical queue length histogram
 
 
-def _rank_same_key(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
-    """rank[i] = #{j < i : valid[j] and keys[j] == keys[i]} (serialization).
+def make_step(dims: TopoDims, cfg: SimConfig, n_flows: int):
+    """Build (init_state, step) for one static program signature.
 
-    Sort-based O(P log P): stable-sort by key (invalid lanes pushed to the
-    end keep rank relative to nothing), then rank = position - group start.
-    Equivalent to the naive O(P^2) pairwise count (see §Perf R9); exactness
-    is covered by the simulator integrity tests.
-    """
-    n = keys.shape[0]
-    big = jnp.int32(jnp.iinfo(np.int32).max)
-    k = jnp.where(valid, keys, big)
-    order = jnp.argsort(k, stable=True)
-    ks = k[order]
-    pos = jnp.arange(n, dtype=I32)
-    new_group = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
-    group_start = jax.lax.associative_scan(
-        jnp.maximum, jnp.where(new_group, pos, 0))
-    rank_sorted = pos - group_start
-    rank = jnp.zeros((n,), I32).at[order].set(rank_sorted)
-    # invalid lanes must rank as if absent; they never contribute, and their
-    # own rank is unused by callers, but keep parity with the naive version
-    return jnp.where(valid, rank, jnp.zeros((), I32)).astype(I32)
-
-
-def _counts_per_key(keys, valid, num):
-    return jax.ops.segment_sum(valid.astype(I32), jnp.where(valid, keys, 0),
-                               num_segments=num)
-
-
-def make_step(topo: Topology, cfg: SimConfig, n_flows: int):
-    """Build (init_state, step). Topology tables and protocol config are
-    compile-time constants; per-flow metadata arrives at trace time as a
-    `FlowOperands` operand of `step`, so one compiled program serves every
-    workload with the same (padded) flow count."""
+    Only `dims` (topology shapes) and the protocol/timing config shape the
+    program; per-flow metadata (`FlowOperands`) AND per-fabric tables
+    (`TopoOperands`) arrive at trace time as operands of `step`, so one
+    compiled program serves every workload on every same-shaped fabric.
+    `cfg.clos` is deliberately unused here — strip it from cache keys."""
     pc, tm = cfg.proto, cfg.timing
-    P = topo.n_ports
-    Q = pc.n_queues
-    CAP = pc.queue_cap
-    PLCAP = pc.pauselist_cap
-    PROP = cfg.clos.prop_ticks
-    F = int(n_flows)
-    H = MAX_HOPS
-    NSRV = topo.params.n_servers
-    NSW = topo.n_switches
-    TAU = tm.tau_ticks
-    S = cfg.bloom_stages
-
-    bparams = bloom.BloomParams(cfg.bloom_stages, cfg.bloom_stage_bits)
-
-    # ---- topology constants --------------------------------------------------
-    port_switch = jnp.asarray(topo.port_switch)          # (P,) -1 for NICs
-    is_nic = jnp.asarray(topo.port_is_nic)
-    # switch fed by each port (for PFC / buffer accounting); -1 = a server
-    feeds = np.full(P, -1, np.int32)
-    p0 = topo.params
-    for s_ in range(NSRV):
-        feeds[s_] = s_ // p0.servers_per_tor                  # NIC -> its ToR
-    for tor in range(p0.n_tor):
-        for sp in range(p0.n_spine):
-            feeds[int(topo.tor_up_port(tor, sp))] = p0.n_tor + sp
-        # ToR down-ports feed servers: stays -1
-    for sp in range(p0.n_spine):
-        for tor in range(p0.n_tor):
-            feeds[int(topo.spine_down_port(sp, tor))] = tor
-    feeds = jnp.asarray(feeds)
-    # feedback ring sized for the worst-case one-way delay (static so the
-    # compiled program is independent of the workload's actual hop counts)
-    RING = H * PROP + 2
-    RRING = tm.rto_ticks + 1
-    buffer_limit = (1 << 29) if pc.infinite_buffer else cfg.clos.switch_buffer_pkts
-    occ_bin_ref = cfg.clos.switch_buffer_pkts
-
-    win_proto = pc.cc in ("dctcp", "hpcc", "fixed")
-    rate_proto = pc.cc == "dcqcn"
-    use_drr = pc.scheduler == "drr"
-
-    q_ar = jnp.arange(Q)
-    p_ar = jnp.arange(P)
-    s_ar = jnp.arange(S)
+    env = phases.make_env(dims, cfg, n_flows)
+    P, NSRV, NSW, PROP = env.P, env.NSRV, env.NSW, env.PROP
+    Q, CAP, PLCAP, S = env.Q, env.CAP, env.PLCAP, env.S
+    F, H, RING, RRING = env.F, env.H, env.RING, env.RRING
 
     def init_state() -> SimState:
         z = functools.partial(jnp.zeros, dtype=I32)
@@ -262,9 +177,9 @@ def make_step(topo: Topology, cfg: SimConfig, n_flows: int):
             f_q=jnp.full((F, H), -1, I32), f_cnt=z((F, H)),
             f_paused=jnp.zeros((F, H), bool),
             d_q=jnp.full((P, NSRV), -1, I32), d_cnt=z((P, NSRV)),
-            bloom_counts=bloom.empty_counts(bparams, P),
-            bloom_mid=jnp.zeros((P, S, bparams.stage_bits), bool),
-            bloom_rx=jnp.zeros((P, S, bparams.stage_bits), bool),
+            bloom_counts=bloom.empty_counts(env.bparams, P),
+            bloom_mid=jnp.zeros((P, S, env.bparams.stage_bits), bool),
+            bloom_rx=jnp.zeros((P, S, env.bparams.stage_bits), bool),
             pl=jnp.full((P, Q, PLCAP), -1, I32), pl_head=z((P, Q)),
             pl_tail=z((P, Q)),
             ing_occ=z((P,)), pfc_paused=jnp.zeros((P,), bool),
@@ -283,448 +198,14 @@ def make_step(topo: Topology, cfg: SimConfig, n_flows: int):
             qlen_hist=z((cfg.occ_bins,)),
         )
 
-    def step(st: SimState, ops: FlowOperands):
-        routes, src, dst, size, arrival, fid, fpos, fbucket, fb_delay = ops
-
-        def hop_of_port(f, p):
-            """Which hop of flow f's route is port p (f, p broadcastable)."""
-            return jnp.argmax(routes[f] == p[..., None], axis=-1).astype(I32)
-
-        t = st.t
-
-        # ---- phase 0: derived state -----------------------------------------
-        occ = st.qtail - st.qhead                          # (P, Q)
-        port_occ = occ.sum(axis=1)                         # (P,)
-        sw_occ = jax.ops.segment_sum(
-            jnp.where(is_nic, 0, port_occ),
-            jnp.maximum(port_switch, 0), num_segments=NSW)  # (NSW,)
-
-        # queue pause bits from the received Bloom snapshot (head-of-queue
-        # check, re-evaluated every tick == "recompute after every dequeue")
-        head_entry = jnp.take_along_axis(
-            st.qbuf, (st.qhead % CAP)[..., None], axis=2)[..., 0]   # (P, Q)
-        head_f = jnp.maximum(head_entry >> 1, 0)
-        if pc.backpressure:
-            head_pos = fpos[head_f]                                 # (P, Q, S)
-            got = st.bloom_rx[p_ar[:, None, None], s_ar[None, None, :],
-                              head_pos]                             # (P, Q, S)
-            qpaused = got.all(axis=-1) & (occ > 0)
-        else:
-            qpaused = jnp.zeros((P, Q), bool)
-
-        n_active = jnp.maximum(((occ > 0) & ~qpaused).sum(axis=1), 1)  # (P,)
-        th = jnp.maximum(
-            jnp.ceil(tm.pause_window / n_active.astype(jnp.float32)), 1.0
-        ).astype(I32)                                                  # (P,)
-
-        # PFC state (hysteresis: pause above th, resume below th/2)
-        if pc.pfc:
-            free_buf = jnp.maximum(buffer_limit - sw_occ, 0)
-            pfc_th = jnp.maximum((pc.pfc_frac * free_buf).astype(I32), 2)
-            th_here = jnp.where(feeds >= 0, pfc_th[jnp.maximum(feeds, 0)],
-                                jnp.int32(1 << 30))
-            pfc_paused = jnp.where(st.pfc_paused,
-                                   st.ing_occ > th_here // 2,
-                                   st.ing_occ > th_here)
-        else:
-            pfc_paused = jnp.zeros((P,), bool)
-
-        # flow arrivals at sources
-        newly = arrival == t
-        rem_src = st.rem_src + jnp.where(newly, size, 0)
-
-        # ---- phase 1: tau-boundary control work ------------------------------
-        is_tau = (t % TAU) == 0
-        bloom_counts, bloom_mid, bloom_rx = (st.bloom_counts, st.bloom_mid,
-                                             st.bloom_rx)
-        pl_head, pl = st.pl_head, st.pl
-        f_paused = st.f_paused
-        if pc.backpressure:
-            pending = st.pl_tail > pl_head
-            below = occ < th[:, None]
-            if pc.resume_limit:
-                do_pop = pending & below & is_tau   # <=1 per queue per tau
-            else:
-                do_pop = pending & below            # ablation: no throttling
-            cand = jnp.take_along_axis(
-                st.pl, (pl_head % PLCAP)[..., None], axis=2)[..., 0]  # (P,Q)
-            cand_f = jnp.maximum(cand, 0)
-            cand_hop = hop_of_port(cand_f, p_ar[:, None])             # (P,Q)
-            valid = (do_pop & (cand >= 0)
-                     & (st.f_q[cand_f, cand_hop] == q_ar[None, :])
-                     & st.f_paused[cand_f, cand_hop]
-                     & (st.f_cnt[cand_f, cand_hop] > 0))
-            pl_head = pl_head + do_pop.astype(I32)
-            # unpause (scatter with OOB-drop for invalid lanes)
-            flat_f = jnp.where(valid, cand_f, F).reshape(-1)
-            flat_hop = cand_hop.reshape(-1)
-            f_paused = f_paused.at[flat_f, flat_hop].set(False)
-            up_port = routes[cand_f.reshape(-1),
-                             jnp.maximum(cand_hop.reshape(-1) - 1, 0)]
-            bloom_counts = bloom.add_batch(
-                bloom_counts, jnp.maximum(up_port, 0),
-                fpos[cand_f.reshape(-1)],
-                jnp.where(valid.reshape(-1), -1, 0))
-            # rotate the filter pipeline every tau (models propagation delay)
-            bloom_rx = jnp.where(is_tau, bloom_mid, bloom_rx)
-            bloom_mid = jnp.where(is_tau, bloom.snapshot(bloom_counts),
-                                  bloom_mid)
-
-        # ---- phase 2: switch egress transmissions ----------------------------
-        eligible = (occ > 0) & ~qpaused & ~pfc_paused[:, None] \
-            & ~is_nic[:, None]
-        if pc.scheduler == "srf":
-            key = jnp.minimum(st.qsrf, BIG)
-        else:
-            key = (q_ar[None, :] - st.qptr[:, None]) % Q
-        key = jnp.where(eligible, key, BIG + 1)
-        packed = key * Q + q_ar[None, :]                   # fits int32
-        sel_q = (jnp.min(packed, axis=1) % Q).astype(I32)
-        can_tx = eligible[p_ar, sel_q]
-        tx_entry = jnp.where(
-            can_tx, st.qbuf[p_ar, sel_q, st.qhead[p_ar, sel_q] % CAP], -1)
-        tx_f = jnp.maximum(tx_entry >> 1, 0)
-        tx_hop = hop_of_port(tx_f, p_ar)
-        qhead = st.qhead.at[p_ar, sel_q].add(can_tx.astype(I32))
-        if use_drr:
-            qptr = jnp.where(can_tx, sel_q + 1, st.qptr)
-        else:
-            qptr = st.qptr
-
-        # flow count decrement at this hop; detect departures (count -> 0)
-        f_cnt = st.f_cnt.at[tx_f, tx_hop].add(-can_tx.astype(I32))
-        departed = can_tx & (f_cnt[tx_f, tx_hop] == 0)
-        dep_f = jnp.where(departed, tx_f, F)               # OOB-drop index
-        was_paused = f_paused[tx_f, tx_hop] & departed
-        up_of_tx = routes[tx_f, jnp.maximum(tx_hop - 1, 0)]
-        if pc.backpressure:
-            bloom_counts = bloom.add_batch(
-                bloom_counts, jnp.maximum(up_of_tx, 0), fpos[tx_f],
-                jnp.where(was_paused, -1, 0))
-            f_paused = f_paused.at[dep_f, tx_hop].set(False)
-        f_q = st.f_q.at[dep_f, tx_hop].set(-1)
-        # dest-keyed bookkeeping
-        d_cnt, d_q = st.d_cnt, st.d_q
-        if pc.queue_key == "dest":
-            d_cnt = d_cnt.at[p_ar, dst[tx_f]].add(-can_tx.astype(I32))
-            d_gone = can_tx & (d_cnt[p_ar, dst[tx_f]] == 0)
-            d_q = d_q.at[p_ar, jnp.where(d_gone, dst[tx_f], NSRV)].set(-1)
-        # PFC ingress accounting (packet left the downstream buffer)
-        ing_occ = st.ing_occ.at[jnp.maximum(up_of_tx, 0)].add(
-            -(can_tx & (tx_hop > 0)).astype(I32))
-        # hash-table departure
-        bucket_cnt = st.bucket_cnt.at[
-            jnp.maximum(port_switch, 0), fbucket[tx_f]].add(
-            -departed.astype(I32))
-        # reset SRF key when queue empties
-        occ_after = occ.at[p_ar, sel_q].add(-can_tx.astype(I32))
-        qsrf = jnp.where(
-            (occ_after == 0) & (q_ar[None, :] == sel_q[:, None])
-            & can_tx[:, None],
-            BIG, st.qsrf)
-        tx_ewma = st.tx_ewma * (1 - 1 / 32) + can_tx.astype(jnp.float32) / 32
-
-        # ---- phase 3: NIC transmissions --------------------------------------
-        started = arrival <= t
-        avail = started & (rem_src > 0) & (st.done < 0)
-        if pc.backpressure:
-            got_nic = bloom_rx[routes[:, 0][:, None], s_ar[None, :],
-                               fpos]                       # (F, S)
-            nic_paused = got_nic.all(axis=-1)
-        else:
-            nic_paused = jnp.zeros((F,), bool)
-        elig_f = avail & ~nic_paused & ~pfc_paused[routes[:, 0]]
-        if win_proto:
-            elig_f &= (st.sent - st.acked) < st.cwnd.astype(I32)
-        tokens = st.tokens
-        if rate_proto:
-            tokens = jnp.minimum(tokens + st.rate, 2.0)
-            elig_f &= tokens >= 1.0
-        # per-server DRR over flows (packed segment-min; F*F must fit int32)
-        f_ar = jnp.arange(F)
-        score = (f_ar - st.nic_ptr[src]) % F
-        packed_f = jnp.where(elig_f, score * F + f_ar, jnp.iinfo(np.int32).max)
-        best_f = jax.ops.segment_min(packed_f, src, num_segments=NSRV)
-        nic_tx = best_f < jnp.iinfo(np.int32).max
-        nic_sel = jnp.where(nic_tx, best_f % F, 0).astype(I32)
-        rem_src = rem_src.at[nic_sel].add(-nic_tx.astype(I32))
-        sent = st.sent.at[nic_sel].add(nic_tx.astype(I32))
-        if rate_proto:
-            tokens = tokens.at[nic_sel].add(-nic_tx.astype(jnp.float32))
-        nic_ptr = jnp.where(nic_tx, nic_sel + 1, st.nic_ptr)
-        tx_ewma = tx_ewma.at[jnp.arange(NSRV)].add(
-            nic_tx.astype(jnp.float32) / 32)
-
-        # ---- write wires / read arrivals -------------------------------------
-        slot = t % PROP
-        arr_entry = st.wire_f[:, slot]                    # packets arriving now
-        arr_hop = st.wire_hop[:, slot]
-        new_entry = jnp.where(can_tx, tx_entry, -1)
-        new_hop = jnp.where(can_tx, tx_hop, 0)
-        new_entry = new_entry.at[jnp.where(nic_tx, jnp.arange(NSRV), P)].set(
-            nic_sel * 2)
-        wire_f = st.wire_f.at[:, slot].set(new_entry)
-        wire_hop = st.wire_hop.at[:, slot].set(new_hop)
-
-        # ---- phase 4: arrival processing -------------------------------------
-        a_valid = arr_entry >= 0                          # (P,) indexed by u
-        a_f = jnp.maximum(arr_entry >> 1, 0)
-        a_mark = (arr_entry & 1).astype(I32)
-        a_next_hop = jnp.minimum(arr_hop + 1, H - 1)
-        next_port_raw = routes[a_f, a_next_hop]
-        last_hop = (arr_hop + 1 >= H) | (next_port_raw < 0)
-        is_delivery = a_valid & last_hop
-        is_sw_arr = a_valid & ~last_hop
-        p_arr = jnp.maximum(next_port_raw, 0)             # target egress port
-
-        # deliveries ----------------------------------------------------------
-        delivered = st.delivered.at[jnp.where(is_delivery, a_f, F)].add(1)
-        just_done = is_delivery & (delivered[a_f] >= size[a_f]) \
-            & (st.done[a_f] < 0)
-        done = st.done.at[jnp.where(just_done, a_f, F)].set(t)
-        # feedback scatter (ACK + ECN echo + HPCC INT)
-        fb_slot = (t + fb_delay[a_f]) % RING
-        fb_f = jnp.where(is_delivery, a_f, F)
-        ack_ring = st.ack_ring.at[fb_slot, fb_f].add(1)
-        mark_ring = st.mark_ring.at[
-            fb_slot, jnp.where(is_delivery & (a_mark > 0), a_f, F)].add(1)
-        u_ring = st.u_ring
-        if pc.cc == "hpcc":
-            # sample path utilization (max over hops): qlen/BDP + tx rate
-            rp = routes[a_f]                                     # (P, H)
-            hop_util = (port_occ[jnp.maximum(rp, 0)].astype(jnp.float32)
-                        / tm.bdp_pkts
-                        + tx_ewma[jnp.maximum(rp, 0)])
-            hop_util = jnp.where(rp >= 0, hop_util, 0.0)
-            u_path = hop_util.max(axis=1)
-            u_ring = u_ring.at[fb_slot, fb_f].max(u_path)
-
-        # switch arrivals -------------------------------------------------------
-        sw_arr = jnp.maximum(port_switch[p_arr], 0)       # target switch
-        # buffer-limit check (serialize same-switch arrivals)
-        rank_sw = _rank_same_key(jnp.where(is_sw_arr, sw_arr, -2), is_sw_arr)
-        room = (sw_occ[sw_arr] + rank_sw) < buffer_limit
-        # queue assignment
-        if pc.queue_key == "dest":
-            have = is_sw_arr & (d_cnt[p_arr, dst[a_f]] > 0)
-            q_exist = jnp.maximum(d_q[p_arr, dst[a_f]], 0)
-        else:
-            have = is_sw_arr & (f_cnt[a_f, a_next_hop] > 0)
-            q_exist = jnp.maximum(f_q[a_f, a_next_hop], 0)
-        needs_alloc = is_sw_arr & ~have
-        if pc.dynamic_queues:
-            free = occ_after == 0                         # (P, Q) post-tx
-            free_keyed = jnp.where(free, q_ar[None, :], Q + q_ar[None, :])
-            free_order = jnp.argsort(free_keyed[p_arr], axis=1)  # per arrival
-            n_free = free[p_arr].sum(axis=1)
-            r_alloc = _rank_same_key(jnp.where(needs_alloc, p_arr, -2),
-                                     needs_alloc)
-            got_free = needs_alloc & (r_alloc < n_free)
-            q_fresh = jnp.take_along_axis(
-                free_order, jnp.minimum(r_alloc, Q - 1)[:, None],
-                axis=1)[:, 0].astype(I32)
-            # collision fallback: random queue (paper's choice)
-            q_rand = (hash_u32(fid[a_f].astype(jnp.uint32)
-                               + t.astype(jnp.uint32), 3)
-                      % jnp.uint32(Q)).astype(I32)
-            q_new = jnp.where(got_free, q_fresh, q_rand)
-            collide = needs_alloc & ~got_free
-        else:
-            key_hash = fid[a_f] if pc.queue_key == "flow" else dst[a_f]
-            q_new = (hash_u32(key_hash, 2) % jnp.uint32(Q)).astype(I32)
-            # stochastic assignment: collision = lands in a busy queue
-            collide = needs_alloc & (occ_after[p_arr, q_new] > 0)
-        a_q = jnp.where(have, q_exist, q_new)
-        # ring-capacity check
-        off_ring = _rank_same_key(jnp.where(is_sw_arr, p_arr * Q + a_q, -2),
-                                  is_sw_arr)
-        ring_room = (occ_after[p_arr, a_q] + off_ring) < CAP
-        accept = is_sw_arr & room & ring_room
-        dropped = is_sw_arr & ~accept
-        # ECN mark decision (on the *total* egress-port occupancy)
-        if pc.ecn:
-            pocc = port_occ[p_arr]
-            if pc.cc == "dctcp":
-                mark_new = pocc >= pc.ecn_kmin
-            else:
-                frac = jnp.clip((pocc - pc.ecn_kmin).astype(jnp.float32)
-                                / max(pc.ecn_kmax - pc.ecn_kmin, 1), 0.0, 1.0)
-                rnd = (hash_u32(fid[a_f].astype(jnp.uint32)
-                                ^ t.astype(jnp.uint32), 1)
-                       .astype(jnp.float32) / jnp.float32(2**32))
-                mark_new = rnd < frac
-            a_mark = jnp.maximum(a_mark, mark_new.astype(I32))
-        # enqueue scatter (accepted lanes have unique ring slots)
-        off = _rank_same_key(jnp.where(accept, p_arr * Q + a_q, -2), accept)
-        pos_in_ring = (st.qtail[p_arr, a_q] + off) % CAP
-        entry_val = a_f * 2 + a_mark
-        qbuf = st.qbuf.at[jnp.where(accept, p_arr, P), a_q, pos_in_ring].set(
-            entry_val)
-        add_per_pq = _counts_per_key(p_arr * Q + a_q, accept,
-                                     P * Q).reshape(P, Q)
-        qtail = st.qtail + add_per_pq
-        occ_new = occ_after + add_per_pq
-        # SRF key: min remaining size of flows in queue
-        if pc.scheduler == "srf":
-            remaining = jnp.maximum(size[a_f] - delivered[a_f], 1)
-            qsrf = qsrf.at[jnp.where(accept, p_arr, P), a_q].min(
-                jnp.minimum(remaining, BIG))
-        # per-flow per-hop bookkeeping
-        acc_f = jnp.where(accept, a_f, F)
-        was_zero = f_cnt[a_f, a_next_hop] == 0
-        f_cnt = f_cnt.at[acc_f, a_next_hop].add(1)
-        f_q = f_q.at[acc_f, a_next_hop].set(a_q)
-        if pc.queue_key == "dest":
-            d_cnt = d_cnt.at[jnp.where(accept, p_arr, P), dst[a_f]].add(1)
-            d_q = d_q.at[jnp.where(accept, p_arr, P), dst[a_f]].set(a_q)
-        # hash-table activation + overflow stat
-        act = accept & was_zero
-        prev_bucket = bucket_cnt[sw_arr, fbucket[a_f]]
-        overflow_ev = jnp.sum((act & (prev_bucket >= cfg.ft_bucket_size))
-                              .astype(I32))
-        bucket_cnt = bucket_cnt.at[jnp.where(act, sw_arr, NSW),
-                                   fbucket[a_f]].add(1)
-        # PFC ingress accounting: the arrival index IS the upstream port
-        ing_occ = ing_occ.at[p_ar].add(accept.astype(I32))
-
-        # BFC pause decision: queue exceeded threshold after this arrival
-        pl_tail = st.pl_tail
-        if pc.backpressure:
-            qlen_now = occ_new[p_arr, a_q]
-            over = accept & (qlen_now > th[p_arr]) \
-                & ~f_paused[a_f, a_next_hop]
-            # never overflow the to-be-resumed ring: skip the pause instead
-            # (costs a little buffering, cannot strand a flow); 32 = headroom
-            # for same-tick pushes to one queue (max = ingress degree)
-            over &= (pl_tail[p_arr, a_q] - pl_head[p_arr, a_q]) < PLCAP - 32
-            f_paused = f_paused.at[jnp.where(over, a_f, F),
-                                   a_next_hop].set(True)
-            bloom_counts = bloom.add_batch(
-                bloom_counts, p_ar, fpos[a_f], jnp.where(over, 1, 0))
-            # push onto the to-be-resumed ring of (p_arr, a_q)
-            push_off = _rank_same_key(
-                jnp.where(over, p_arr * Q + a_q, -2), over)
-            pl_pos = (pl_tail[p_arr, a_q] + push_off) % PLCAP
-            pl = pl.at[jnp.where(over, p_arr, P), a_q, pl_pos].set(a_f)
-            pl_tail = pl_tail + _counts_per_key(
-                p_arr * Q + a_q, over, P * Q).reshape(P, Q)
-            n_pauses = jnp.sum(over.astype(I32))
-        else:
-            n_pauses = jnp.int32(0)
-
-        # drops: schedule a retransmit credit after RTO
-        retx_slot = (t + tm.rto_ticks) % RRING
-        retx_ring = st.retx_ring.at[
-            retx_slot, jnp.where(dropped, a_f, F)].add(1)
-
-        # ---- phase 5: feedback + CC updates ----------------------------------
-        row = t % RING
-        acks_now = ack_ring[row]
-        marks_now = mark_ring[row]
-        u_now = u_ring[row]
-        ack_ring = ack_ring.at[row].set(0)
-        mark_ring = mark_ring.at[row].set(0)
-        u_ring = u_ring.at[row].set(0.0)
-        acked = st.acked + acks_now
-        rrow = t % RRING
-        retx_now = retx_ring[rrow]
-        retx_ring = retx_ring.at[rrow].set(0)
-        rem_src = rem_src + retx_now
-        sent = sent - retx_now
-
-        cwnd, cwnd_ref, alpha = st.cwnd, st.cwnd_ref, st.alpha
-        ack_seen = st.ack_seen + acks_now
-        mark_seen = st.mark_seen + marks_now
-        cc_timer = st.cc_timer - 1
-        rate, rate_target, since_dec = st.rate, st.rate_target, st.since_dec
-        if pc.cc == "dctcp":
-            epoch = cc_timer <= 0
-            fracm = mark_seen.astype(jnp.float32) / jnp.maximum(ack_seen, 1)
-            alpha = jnp.where(epoch,
-                              (1 - pc.dctcp_g) * alpha + pc.dctcp_g * fracm,
-                              alpha)
-            cwnd = jnp.where(epoch & (mark_seen > 0),
-                             cwnd * (1 - alpha / 2), cwnd)
-            cwnd = jnp.where(epoch & (mark_seen == 0), cwnd + 1.0, cwnd)
-            cwnd = jnp.clip(cwnd, 1.0, float(pc.window_init))
-            ack_seen = jnp.where(epoch, 0, ack_seen)
-            mark_seen = jnp.where(epoch, 0, mark_seen)
-            cc_timer = jnp.where(epoch, tm.e2e_rtt_ticks, cc_timer)
-        elif pc.cc == "hpcc":
-            has_fb = acks_now > 0
-            u_norm = jnp.maximum(u_now, 1e-3) / pc.hpcc_eta
-            w_new = cwnd_ref / u_norm + pc.hpcc_wai
-            cwnd = jnp.where(has_fb,
-                             jnp.clip(w_new, 1.0, float(pc.window_init)), cwnd)
-            epoch = cc_timer <= 0
-            cwnd_ref = jnp.where(epoch, cwnd, cwnd_ref)
-            cc_timer = jnp.where(epoch, tm.e2e_rtt_ticks, cc_timer)
-        elif pc.cc == "dcqcn":
-            epoch = cc_timer <= 0
-            congested = mark_seen > 0
-            rate_target = jnp.where(epoch & congested, rate, rate_target)
-            rate = jnp.where(epoch & congested, rate * (1 - alpha / 2), rate)
-            alpha = jnp.where(
-                epoch,
-                jnp.where(congested,
-                          (1 - pc.dcqcn_alpha_g) * alpha + pc.dcqcn_alpha_g,
-                          (1 - pc.dcqcn_alpha_g) * alpha),
-                alpha)
-            since_dec = jnp.where(epoch & congested, 0, since_dec + 1)
-            inc = since_dec >= pc.dcqcn_timer
-            rate = jnp.where(inc, (rate + rate_target) / 2, rate)
-            rate_target = jnp.where(
-                inc, jnp.minimum(rate_target + pc.dcqcn_rai, 1.0), rate_target)
-            since_dec = jnp.where(inc, 0, since_dec)
-            rate = jnp.clip(rate, 1e-3, 1.0)
-            mark_seen = jnp.where(epoch, 0, mark_seen)
-            ack_seen = jnp.where(epoch, 0, ack_seen)
-            cc_timer = jnp.where(epoch, tm.e2e_rtt_ticks, cc_timer)
-
-        # ---- phase 6: statistics ---------------------------------------------
-        sample = (t % cfg.stat_every) == 0
-        occ_bin = jnp.clip(sw_occ * cfg.occ_bins // max(occ_bin_ref, 1), 0,
-                           cfg.occ_bins - 1)
-        occ_hist = st.occ_hist.at[occ_bin].add(jnp.where(sample, 1, 0))
-        # active flows per switch egress port (Fig. 10c)
-        active_fh = (f_cnt > 0) & (routes >= 0)
-        per_port = jax.ops.segment_sum(
-            active_fh.astype(I32).reshape(-1),
-            jnp.maximum(routes, 0).reshape(-1), num_segments=P)
-        fl_bin = jnp.clip(per_port, 0, cfg.flows_bins - 1)
-        flows_hist = st.flows_hist.at[fl_bin].add(
-            jnp.where(sample & ~is_nic, 1, 0))
-        qlen_bin = jnp.clip(occ_new * cfg.occ_bins // max(CAP, 1), 0,
-                            cfg.occ_bins - 1)
-        qlen_hist = st.qlen_hist.at[qlen_bin.reshape(-1)].add(
-            jnp.where(sample & (occ_new.reshape(-1) > 0), 1, 0))
-
-        new_st = SimState(
-            t=t + 1, rem_src=rem_src, sent=sent, acked=acked,
-            delivered=delivered, done=done, cwnd=cwnd, cwnd_ref=cwnd_ref,
-            rate=rate, rate_target=rate_target, tokens=tokens, alpha=alpha,
-            ack_seen=ack_seen, mark_seen=mark_seen, cc_timer=cc_timer,
-            since_dec=since_dec, qbuf=qbuf, qhead=qhead, qtail=qtail,
-            qptr=qptr, qsrf=qsrf, f_q=f_q, f_cnt=f_cnt, f_paused=f_paused,
-            d_q=d_q, d_cnt=d_cnt, bloom_counts=bloom_counts,
-            bloom_mid=bloom_mid, bloom_rx=bloom_rx, pl=pl, pl_head=pl_head,
-            pl_tail=pl_tail, ing_occ=ing_occ, pfc_paused=pfc_paused,
-            wire_f=wire_f, wire_hop=wire_hop, tx_ewma=tx_ewma,
-            ack_ring=ack_ring, mark_ring=mark_ring, u_ring=u_ring,
-            retx_ring=retx_ring, nic_ptr=nic_ptr, bucket_cnt=bucket_cnt,
-            stat_drops=st.stat_drops + dropped.sum().astype(I32),
-            stat_collisions=st.stat_collisions + collide.sum().astype(I32),
-            stat_allocs=st.stat_allocs + needs_alloc.sum().astype(I32),
-            stat_overflow=st.stat_overflow + overflow_ev,
-            stat_pauses=st.stat_pauses + n_pauses,
-            stat_pfc_ticks=st.stat_pfc_ticks + pfc_paused.sum().astype(I32),
-            occ_hist=occ_hist, flows_hist=flows_hist, qlen_hist=qlen_hist,
-        )
-        probe = (st.delivered[cfg.probe_flow]
-                 if cfg.probe_flow >= 0 else jnp.int32(0))
-        emit = jnp.stack([sw_occ.max().astype(I32),
-                          pfc_paused.sum().astype(I32), probe])
-        return new_st, emit
+    def step(st: SimState, ops: FlowOperands, topo_ops):
+        ctx = phases.derive(env, st, ops, topo_ops)
+        ctx = phases.control(env, st, ops, topo_ops, ctx)
+        ctx = phases.switch_tx(env, st, ops, topo_ops, ctx)
+        ctx = phases.nic_tx(env, st, ops, topo_ops, ctx)
+        ctx = phases.arrivals(env, st, ops, topo_ops, ctx)
+        ctx = phases.feedback(env, st, ops, topo_ops, ctx)
+        return phases.stats(env, st, ops, topo_ops, ctx)
 
     return init_state, step
 
@@ -739,35 +220,50 @@ def trace_count() -> int:
     return len(TRACE_EVENTS)
 
 
-@functools.lru_cache(maxsize=None)
-def compiled_runner(clos_params, cfg: SimConfig, n_flows: int, n_ticks: int,
-                    unroll: int = 1, batched: bool = False):
+def static_cfg(cfg: SimConfig) -> SimConfig:
+    """The compile-cache view of a SimConfig: `clos` stripped, because the
+    topology is a traced operand — fabrics that differ only in ClosParams
+    (and agree on `TopoDims`) share one executable."""
+    return replace(cfg, clos=None)
+
+
+def compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
+                    n_ticks: int, unroll: int = 1, batched: bool = False):
     """The jitted simulator program for one static signature.
 
-    Keyed on everything that shapes the XLA program: topology parameters,
-    protocol/timing config, (padded) flow count, tick count. Repeat calls —
-    e.g. every seed/load of a sweep, or serial runs over same-sized
-    workloads — reuse the cached executable instead of recompiling the
-    ~700-line scan. With `batched=True` the returned function takes
-    `FlowOperands` with a leading batch axis and vmaps the whole simulation
-    over it (still a single compilation for the entire grid)."""
-    from .topology import build
-    topo = build(clos_params)
-    init_state, step = make_step(topo, cfg, n_flows)
+    Keyed on everything that shapes the XLA program: `TopoDims`, the
+    protocol/timing config (normalized through `static_cfg` here, so
+    ClosParams can never fragment the cache), (padded) flow count, tick
+    count. Repeat calls — every topology/seed/load of a sweep, or serial
+    runs over same-shaped cases — reuse the cached executable instead of
+    recompiling the scan. With `batched=True` the returned function takes
+    `FlowOperands` and `TopoOperands` with a leading batch axis and vmaps
+    the whole simulation over both (still a single compilation for the
+    entire grid)."""
+    return _compiled_runner(dims, static_cfg(cfg), n_flows, n_ticks,
+                            unroll, batched)
 
-    def one(ops):
-        return jax.lax.scan(lambda s, _: step(s, ops), init_state(), None,
-                            length=n_ticks, unroll=unroll)
 
-    def go(ops):
-        TRACE_EVENTS.append((cfg.proto.name, clos_params, n_flows, n_ticks,
+@functools.lru_cache(maxsize=None)
+def _compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
+                     n_ticks: int, unroll: int, batched: bool):
+    init_state, step = make_step(dims, cfg, n_flows)
+
+    def one(flow_ops, topo_ops):
+        return jax.lax.scan(lambda s, _: step(s, flow_ops, topo_ops),
+                            init_state(), None, length=n_ticks,
+                            unroll=unroll)
+
+    def go(flow_ops, topo_ops):
+        TRACE_EVENTS.append((cfg.proto.name, dims, n_flows, n_ticks,
                              batched))
-        return jax.vmap(one)(ops) if batched else one(ops)
+        return (jax.vmap(one)(flow_ops, topo_ops) if batched
+                else one(flow_ops, topo_ops))
 
     return jax.jit(go)
 
 
-def run(topo: Topology, flows: FlowSet, cfg: SimConfig, n_ticks: int,
+def run(topo: Topology, flows, cfg: SimConfig, n_ticks: int,
         unroll: int = 1):
     """Run the simulation for `n_ticks`. Returns (final_state, emits[T,3]).
 
@@ -775,6 +271,9 @@ def run(topo: Topology, flows: FlowSet, cfg: SimConfig, n_ticks: int,
     (§Perf R9) — the step is gather/scatter-bound, not dispatch-bound — so
     the default stays 1."""
     n_ticks = int(np.ceil(n_ticks / unroll) * unroll)
-    go = compiled_runner(topo.params, cfg, flows.n_flows, n_ticks, unroll)
-    st, emits = go(pack_flows(flows, cfg))
+    dims = TopoDims.of(topo)
+    go = compiled_runner(dims, static_cfg(cfg), flows.n_flows, n_ticks,
+                         unroll)
+    st, emits = go(pack_flows(flows, cfg),
+                   pack_topo(topo, infinite_buffer=cfg.proto.infinite_buffer))
     return jax.device_get(st), np.asarray(emits)

@@ -1,0 +1,32 @@
+"""Phase modules of the tick-synchronous simulator step.
+
+`engine.py` owns the state definitions and orchestrates one tick as a
+pipeline of pure phase functions, every one with the same signature
+
+    phase(env: PhaseEnv, st: SimState, ops: FlowOperands,
+          topo: TopoOperands, ctx: StepCtx) -> StepCtx
+
+threading a `StepCtx` of per-tick derived state (see `ctx.py`). Phases are
+independently importable and unit-tested (tests/test_sim_phases.py); the
+composition is documented in docs/ARCHITECTURE.md.
+
+Phase order per tick:
+  0. ctx.derive        occupancy, N_active, thresholds, pause bits
+  1. control           tau-boundary resumes + Bloom pipeline rotation
+  2. switch_tx         switch egress transmissions (DRR/SRF)
+  3. nic_tx            NIC transmissions (per-server DRR over flows)
+  4. arrivals          wire propagation, deliveries, enqueues, pauses, drops
+  5. feedback          ACK/ECN/INT consumption + congestion-control laws
+  6. stats             histograms + next SimState + per-tick emit row
+"""
+from .ctx import BIG, I32, PhaseEnv, StepCtx, derive, make_env
+from .control import control
+from .switch_tx import switch_tx
+from .nic_tx import nic_tx
+from .arrivals import arrivals
+from .feedback import feedback
+from .stats import stats
+
+__all__ = ["BIG", "I32", "PhaseEnv", "StepCtx", "derive", "make_env",
+           "control", "switch_tx", "nic_tx", "arrivals", "feedback",
+           "stats"]

@@ -1,0 +1,203 @@
+"""Phase 4: wire propagation + arrival processing (paper §3.2-3.3).
+
+Writes this tick's transmissions onto the wires, reads the packets whose
+propagation delay expires now, then processes every arrival in parallel:
+deliveries schedule delayed feedback (ACK / ECN echo / HPCC INT); switch
+arrivals pass the shared-buffer admission check, get a queue (existing
+assignment, else dynamic first-free / stochastic hash), are ECN-marked,
+enqueued, and may trigger a BFC pause when their queue crosses the dynamic
+threshold. Same-tick same-queue arrivals serialize via pairwise ranks, and
+drops schedule retransmit credits after an RTO."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import bloom
+from ...core.hashing import hash_u32
+from .ctx import (BIG, I32, PhaseEnv, StepCtx, counts_per_key,
+                  rank_same_key)
+
+
+def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
+    pc, tm = env.cfg.proto, env.cfg.timing
+    P, Q, F, H, CAP = env.P, env.Q, env.F, env.H, env.CAP
+    NSRV, NSW, PLCAP = env.NSRV, env.NSW, env.PLCAP
+    p_ar = jnp.arange(P)
+    t = ctx.t
+
+    # ---- write wires / read arrivals ----------------------------------------
+    slot = t % env.PROP
+    arr_entry = st.wire_f[:, slot]                    # packets arriving now
+    arr_hop = st.wire_hop[:, slot]
+    new_entry = jnp.where(ctx.can_tx, ctx.tx_entry, -1)
+    new_hop = jnp.where(ctx.can_tx, ctx.tx_hop, 0)
+    new_entry = new_entry.at[
+        jnp.where(ctx.nic_tx, jnp.arange(NSRV), P)].set(ctx.nic_sel * 2)
+    wire_f = st.wire_f.at[:, slot].set(new_entry)
+    wire_hop = st.wire_hop.at[:, slot].set(new_hop)
+
+    a_valid = arr_entry >= 0                          # (P,) indexed by u
+    a_f = jnp.maximum(arr_entry >> 1, 0)
+    a_mark = (arr_entry & 1).astype(I32)
+    a_next_hop = jnp.minimum(arr_hop + 1, H - 1)
+    next_port_raw = ops.routes[a_f, a_next_hop]
+    last_hop = (arr_hop + 1 >= H) | (next_port_raw < 0)
+    is_delivery = a_valid & last_hop
+    is_sw_arr = a_valid & ~last_hop
+    p_arr = jnp.maximum(next_port_raw, 0)             # target egress port
+
+    # deliveries --------------------------------------------------------------
+    delivered = st.delivered.at[jnp.where(is_delivery, a_f, F)].add(1)
+    just_done = is_delivery & (delivered[a_f] >= ops.size[a_f]) \
+        & (st.done[a_f] < 0)
+    done = st.done.at[jnp.where(just_done, a_f, F)].set(t)
+    # feedback scatter (ACK + ECN echo + HPCC INT)
+    fb_slot = (t + ops.fb_delay[a_f]) % env.RING
+    fb_f = jnp.where(is_delivery, a_f, F)
+    ack_ring = st.ack_ring.at[fb_slot, fb_f].add(1)
+    mark_ring = st.mark_ring.at[
+        fb_slot, jnp.where(is_delivery & (a_mark > 0), a_f, F)].add(1)
+    u_ring = st.u_ring
+    if pc.cc == "hpcc":
+        # sample path utilization (max over hops): qlen/BDP + tx rate
+        rp = ops.routes[a_f]                                 # (P, H)
+        hop_util = (ctx.port_occ[jnp.maximum(rp, 0)].astype(jnp.float32)
+                    / tm.bdp_pkts
+                    + ctx.tx_ewma[jnp.maximum(rp, 0)])
+        hop_util = jnp.where(rp >= 0, hop_util, 0.0)
+        u_path = hop_util.max(axis=1)
+        u_ring = u_ring.at[fb_slot, fb_f].max(u_path)
+
+    # switch arrivals ---------------------------------------------------------
+    sw_arr = jnp.maximum(topo.port_switch[p_arr], 0)  # target switch
+    # buffer-limit check (serialize same-switch arrivals)
+    rank_sw = rank_same_key(jnp.where(is_sw_arr, sw_arr, -2), is_sw_arr)
+    room = (ctx.sw_occ[sw_arr] + rank_sw) < topo.buffer_limit
+    # queue assignment
+    f_cnt, f_q = ctx.f_cnt, ctx.f_q
+    d_cnt, d_q = ctx.d_cnt, ctx.d_q
+    occ_after = ctx.occ_after
+    if pc.queue_key == "dest":
+        have = is_sw_arr & (d_cnt[p_arr, ops.dst[a_f]] > 0)
+        q_exist = jnp.maximum(d_q[p_arr, ops.dst[a_f]], 0)
+    else:
+        have = is_sw_arr & (f_cnt[a_f, a_next_hop] > 0)
+        q_exist = jnp.maximum(f_q[a_f, a_next_hop], 0)
+    needs_alloc = is_sw_arr & ~have
+    q_ar = jnp.arange(Q)
+    if pc.dynamic_queues:
+        free = occ_after == 0                         # (P, Q) post-tx
+        free_keyed = jnp.where(free, q_ar[None, :], Q + q_ar[None, :])
+        free_order = jnp.argsort(free_keyed[p_arr], axis=1)  # per arrival
+        n_free = free[p_arr].sum(axis=1)
+        r_alloc = rank_same_key(jnp.where(needs_alloc, p_arr, -2),
+                                needs_alloc)
+        got_free = needs_alloc & (r_alloc < n_free)
+        q_fresh = jnp.take_along_axis(
+            free_order, jnp.minimum(r_alloc, Q - 1)[:, None],
+            axis=1)[:, 0].astype(I32)
+        # collision fallback: random queue (paper's choice)
+        q_rand = (hash_u32(ops.fid[a_f].astype(jnp.uint32)
+                           + t.astype(jnp.uint32), 3)
+                  % jnp.uint32(Q)).astype(I32)
+        q_new = jnp.where(got_free, q_fresh, q_rand)
+        collide = needs_alloc & ~got_free
+    else:
+        key_hash = ops.fid[a_f] if pc.queue_key == "flow" else ops.dst[a_f]
+        q_new = (hash_u32(key_hash, 2) % jnp.uint32(Q)).astype(I32)
+        # stochastic assignment: collision = lands in a busy queue
+        collide = needs_alloc & (occ_after[p_arr, q_new] > 0)
+    a_q = jnp.where(have, q_exist, q_new)
+    # ring-capacity check
+    off_ring = rank_same_key(jnp.where(is_sw_arr, p_arr * Q + a_q, -2),
+                             is_sw_arr)
+    ring_room = (occ_after[p_arr, a_q] + off_ring) < CAP
+    accept = is_sw_arr & room & ring_room
+    dropped = is_sw_arr & ~accept
+    # ECN mark decision (on the *total* egress-port occupancy)
+    if pc.ecn:
+        pocc = ctx.port_occ[p_arr]
+        if pc.cc == "dctcp":
+            mark_new = pocc >= pc.ecn_kmin
+        else:
+            frac = jnp.clip((pocc - pc.ecn_kmin).astype(jnp.float32)
+                            / max(pc.ecn_kmax - pc.ecn_kmin, 1), 0.0, 1.0)
+            rnd = (hash_u32(ops.fid[a_f].astype(jnp.uint32)
+                            ^ t.astype(jnp.uint32), 1)
+                   .astype(jnp.float32) / jnp.float32(2**32))
+            mark_new = rnd < frac
+        a_mark = jnp.maximum(a_mark, mark_new.astype(I32))
+    # enqueue scatter (accepted lanes have unique ring slots)
+    off = rank_same_key(jnp.where(accept, p_arr * Q + a_q, -2), accept)
+    pos_in_ring = (st.qtail[p_arr, a_q] + off) % CAP
+    entry_val = a_f * 2 + a_mark
+    qbuf = st.qbuf.at[jnp.where(accept, p_arr, P), a_q, pos_in_ring].set(
+        entry_val)
+    add_per_pq = counts_per_key(p_arr * Q + a_q, accept,
+                                P * Q).reshape(P, Q)
+    qtail = st.qtail + add_per_pq
+    occ_new = occ_after + add_per_pq
+    # SRF key: min remaining size of flows in queue
+    qsrf = ctx.qsrf
+    if pc.scheduler == "srf":
+        remaining = jnp.maximum(ops.size[a_f] - delivered[a_f], 1)
+        qsrf = qsrf.at[jnp.where(accept, p_arr, P), a_q].min(
+            jnp.minimum(remaining, BIG))
+    # per-flow per-hop bookkeeping
+    acc_f = jnp.where(accept, a_f, F)
+    was_zero = f_cnt[a_f, a_next_hop] == 0
+    f_cnt = f_cnt.at[acc_f, a_next_hop].add(1)
+    f_q = f_q.at[acc_f, a_next_hop].set(a_q)
+    if pc.queue_key == "dest":
+        d_cnt = d_cnt.at[jnp.where(accept, p_arr, P), ops.dst[a_f]].add(1)
+        d_q = d_q.at[jnp.where(accept, p_arr, P), ops.dst[a_f]].set(a_q)
+    # hash-table activation + overflow stat
+    act = accept & was_zero
+    prev_bucket = ctx.bucket_cnt[sw_arr, ops.fbucket[a_f]]
+    overflow_ev = jnp.sum((act & (prev_bucket >= env.cfg.ft_bucket_size))
+                          .astype(I32))
+    bucket_cnt = ctx.bucket_cnt.at[jnp.where(act, sw_arr, NSW),
+                                   ops.fbucket[a_f]].add(1)
+    # PFC ingress accounting: the arrival index IS the upstream port
+    ing_occ = ctx.ing_occ.at[p_ar].add(accept.astype(I32))
+
+    # BFC pause decision: queue exceeded threshold after this arrival
+    f_paused, bloom_counts = ctx.f_paused, ctx.bloom_counts
+    pl, pl_tail = ctx.pl, st.pl_tail
+    if pc.backpressure:
+        qlen_now = occ_new[p_arr, a_q]
+        over = accept & (qlen_now > ctx.th[p_arr]) \
+            & ~f_paused[a_f, a_next_hop]
+        # never overflow the to-be-resumed ring: skip the pause instead
+        # (costs a little buffering, cannot strand a flow); 32 = headroom
+        # for same-tick pushes to one queue (max = ingress degree)
+        over &= (pl_tail[p_arr, a_q] - ctx.pl_head[p_arr, a_q]) < PLCAP - 32
+        f_paused = f_paused.at[jnp.where(over, a_f, F),
+                               a_next_hop].set(True)
+        bloom_counts = bloom.add_batch(
+            bloom_counts, p_ar, ops.fpos[a_f], jnp.where(over, 1, 0))
+        # push onto the to-be-resumed ring of (p_arr, a_q)
+        push_off = rank_same_key(
+            jnp.where(over, p_arr * Q + a_q, -2), over)
+        pl_pos = (pl_tail[p_arr, a_q] + push_off) % PLCAP
+        pl = pl.at[jnp.where(over, p_arr, P), a_q, pl_pos].set(a_f)
+        pl_tail = pl_tail + counts_per_key(
+            p_arr * Q + a_q, over, P * Q).reshape(P, Q)
+        n_pauses = jnp.sum(over.astype(I32))
+    else:
+        n_pauses = jnp.int32(0)
+
+    # drops: schedule a retransmit credit after RTO
+    retx_slot = (t + tm.rto_ticks) % env.RRING
+    retx_ring = st.retx_ring.at[
+        retx_slot, jnp.where(dropped, a_f, F)].add(1)
+
+    return ctx._replace(
+        wire_f=wire_f, wire_hop=wire_hop, delivered=delivered, done=done,
+        ack_ring=ack_ring, mark_ring=mark_ring, u_ring=u_ring,
+        retx_ring=retx_ring, qbuf=qbuf, qtail=qtail, occ_new=occ_new,
+        qsrf=qsrf, f_cnt=f_cnt, f_q=f_q, d_cnt=d_cnt, d_q=d_q,
+        bucket_cnt=bucket_cnt, ing_occ=ing_occ, f_paused=f_paused,
+        bloom_counts=bloom_counts, pl=pl, pl_tail=pl_tail, dropped=dropped,
+        collide=collide, needs_alloc=needs_alloc, overflow_ev=overflow_ev,
+        n_pauses=n_pauses)

@@ -1,0 +1,61 @@
+"""Phase 1: tau-boundary control work (paper §3.3).
+
+Pops at most one to-be-resumed flow per (port, queue) per tau from the
+resume ring (the paper's buffer optimization; disabled by the
+`resume_limit=False` ablation), clears its pause bit, decrements the
+upstream counting Bloom filter, and rotates the filter pipeline
+counts -> in-flight snapshot -> applied snapshot every tau (modeling pause
+frame propagation delay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import bloom
+from .ctx import I32, PhaseEnv, StepCtx, hop_of_port
+
+
+def control(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
+    pc = env.cfg.proto
+    P, Q, F, PLCAP = env.P, env.Q, env.F, env.PLCAP
+    p_ar = jnp.arange(P)
+    q_ar = jnp.arange(Q)
+
+    is_tau = (ctx.t % env.TAU) == 0
+    bloom_counts, bloom_mid, bloom_rx = (st.bloom_counts, st.bloom_mid,
+                                         st.bloom_rx)
+    pl_head, pl = st.pl_head, st.pl
+    f_paused = st.f_paused
+    if pc.backpressure:
+        pending = st.pl_tail > pl_head
+        below = ctx.occ < ctx.th[:, None]
+        if pc.resume_limit:
+            do_pop = pending & below & is_tau   # <=1 per queue per tau
+        else:
+            do_pop = pending & below            # ablation: no throttling
+        cand = jnp.take_along_axis(
+            st.pl, (pl_head % PLCAP)[..., None], axis=2)[..., 0]  # (P,Q)
+        cand_f = jnp.maximum(cand, 0)
+        cand_hop = hop_of_port(ops.routes, cand_f, p_ar[:, None])  # (P,Q)
+        valid = (do_pop & (cand >= 0)
+                 & (st.f_q[cand_f, cand_hop] == q_ar[None, :])
+                 & st.f_paused[cand_f, cand_hop]
+                 & (st.f_cnt[cand_f, cand_hop] > 0))
+        pl_head = pl_head + do_pop.astype(I32)
+        # unpause (scatter with OOB-drop for invalid lanes)
+        flat_f = jnp.where(valid, cand_f, F).reshape(-1)
+        flat_hop = cand_hop.reshape(-1)
+        f_paused = f_paused.at[flat_f, flat_hop].set(False)
+        up_port = ops.routes[cand_f.reshape(-1),
+                             jnp.maximum(cand_hop.reshape(-1) - 1, 0)]
+        bloom_counts = bloom.add_batch(
+            bloom_counts, jnp.maximum(up_port, 0),
+            ops.fpos[cand_f.reshape(-1)],
+            jnp.where(valid.reshape(-1), -1, 0))
+        # rotate the filter pipeline every tau (models propagation delay)
+        bloom_rx = jnp.where(is_tau, bloom_mid, bloom_rx)
+        bloom_mid = jnp.where(is_tau, bloom.snapshot(bloom_counts),
+                              bloom_mid)
+
+    return ctx._replace(bloom_counts=bloom_counts, bloom_mid=bloom_mid,
+                        bloom_rx=bloom_rx, pl=pl, pl_head=pl_head,
+                        f_paused=f_paused)

@@ -1,0 +1,245 @@
+"""Shared step context: static env, per-tick derived state, scatter helpers.
+
+`PhaseEnv` carries everything that shapes the compiled program (protocol /
+timing config + `TopoDims`); `StepCtx` carries the traced values phases hand
+to each other within one tick. Fields a phase has not produced yet are None,
+so misordered phase composition fails loudly at trace time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import bloom
+from ..config import SimConfig
+from ..topology import MAX_HOPS, TopoDims
+
+I32 = jnp.int32
+BIG = np.int32(1 << 20)  # large-but-packable sentinel for priority keys
+
+
+class PhaseEnv(NamedTuple):
+    """Compile-time constants shared by every phase (hashable, static)."""
+    cfg: SimConfig           # .clos is unused — topology arrives as operands
+    dims: TopoDims
+    F: int                   # (padded) flow count
+    RING: int                # feedback ring length (worst-case delay + 2)
+    RRING: int               # retransmit ring length (rto + 1)
+    bparams: bloom.BloomParams
+
+    @property
+    def P(self) -> int:
+        return self.dims.n_ports
+
+    @property
+    def NSRV(self) -> int:
+        return self.dims.n_servers
+
+    @property
+    def NSW(self) -> int:
+        return self.dims.n_switches
+
+    @property
+    def PROP(self) -> int:
+        return self.dims.prop_ticks
+
+    @property
+    def Q(self) -> int:
+        return self.cfg.proto.n_queues
+
+    @property
+    def CAP(self) -> int:
+        return self.cfg.proto.queue_cap
+
+    @property
+    def PLCAP(self) -> int:
+        return self.cfg.proto.pauselist_cap
+
+    @property
+    def H(self) -> int:
+        return MAX_HOPS
+
+    @property
+    def S(self) -> int:
+        return self.cfg.bloom_stages
+
+    @property
+    def TAU(self) -> int:
+        return self.cfg.timing.tau_ticks
+
+
+def make_env(dims: TopoDims, cfg: SimConfig, n_flows: int) -> PhaseEnv:
+    # feedback ring sized for the worst-case one-way delay (static so the
+    # compiled program is independent of the workload's actual hop counts)
+    return PhaseEnv(cfg=cfg, dims=dims, F=int(n_flows),
+                    RING=MAX_HOPS * dims.prop_ticks + 2,
+                    RRING=cfg.timing.rto_ticks + 1,
+                    bparams=bloom.BloomParams(cfg.bloom_stages,
+                                              cfg.bloom_stage_bits))
+
+
+class StepCtx(NamedTuple):
+    """Per-tick values threaded through the phase pipeline.
+
+    Grouped by producing phase; every field is consumed by at least one
+    later phase or by the final state assembly in `stats`."""
+    # -- phase 0 (derive) ----------------------------------------------------
+    t: Optional[jnp.ndarray] = None
+    occ: Optional[jnp.ndarray] = None          # (P, Q) pre-tx occupancy
+    port_occ: Optional[jnp.ndarray] = None     # (P,)
+    sw_occ: Optional[jnp.ndarray] = None       # (NSW,)
+    qpaused: Optional[jnp.ndarray] = None      # (P, Q) head-of-queue pause
+    th: Optional[jnp.ndarray] = None           # (P,) dynamic pause threshold
+    pfc_paused: Optional[jnp.ndarray] = None   # (P,)
+    rem_src: Optional[jnp.ndarray] = None      # (F,) incl. this tick's work
+    # -- phase 1 (control) ---------------------------------------------------
+    bloom_counts: Optional[jnp.ndarray] = None
+    bloom_mid: Optional[jnp.ndarray] = None
+    bloom_rx: Optional[jnp.ndarray] = None
+    pl: Optional[jnp.ndarray] = None
+    pl_head: Optional[jnp.ndarray] = None
+    f_paused: Optional[jnp.ndarray] = None
+    # -- phase 2 (switch_tx) -------------------------------------------------
+    can_tx: Optional[jnp.ndarray] = None       # (P,)
+    tx_entry: Optional[jnp.ndarray] = None     # (P,)
+    tx_hop: Optional[jnp.ndarray] = None       # (P,)
+    qhead: Optional[jnp.ndarray] = None
+    qptr: Optional[jnp.ndarray] = None
+    qsrf: Optional[jnp.ndarray] = None
+    f_cnt: Optional[jnp.ndarray] = None
+    f_q: Optional[jnp.ndarray] = None
+    d_cnt: Optional[jnp.ndarray] = None
+    d_q: Optional[jnp.ndarray] = None
+    ing_occ: Optional[jnp.ndarray] = None
+    bucket_cnt: Optional[jnp.ndarray] = None
+    occ_after: Optional[jnp.ndarray] = None    # (P, Q) post-tx occupancy
+    tx_ewma: Optional[jnp.ndarray] = None
+    # -- phase 3 (nic_tx) ----------------------------------------------------
+    sent: Optional[jnp.ndarray] = None
+    tokens: Optional[jnp.ndarray] = None
+    nic_ptr: Optional[jnp.ndarray] = None
+    nic_tx: Optional[jnp.ndarray] = None       # (NSRV,) bool
+    nic_sel: Optional[jnp.ndarray] = None      # (NSRV,)
+    # -- phase 4 (arrivals) --------------------------------------------------
+    wire_f: Optional[jnp.ndarray] = None
+    wire_hop: Optional[jnp.ndarray] = None
+    delivered: Optional[jnp.ndarray] = None
+    done: Optional[jnp.ndarray] = None
+    ack_ring: Optional[jnp.ndarray] = None
+    mark_ring: Optional[jnp.ndarray] = None
+    u_ring: Optional[jnp.ndarray] = None
+    retx_ring: Optional[jnp.ndarray] = None
+    qbuf: Optional[jnp.ndarray] = None
+    qtail: Optional[jnp.ndarray] = None
+    occ_new: Optional[jnp.ndarray] = None      # (P, Q) post-arrival occupancy
+    pl_tail: Optional[jnp.ndarray] = None
+    dropped: Optional[jnp.ndarray] = None      # (P,) bool
+    collide: Optional[jnp.ndarray] = None      # (P,) bool
+    needs_alloc: Optional[jnp.ndarray] = None  # (P,) bool
+    overflow_ev: Optional[jnp.ndarray] = None  # () i32
+    n_pauses: Optional[jnp.ndarray] = None     # () i32
+    # -- phase 5 (feedback) --------------------------------------------------
+    acked: Optional[jnp.ndarray] = None
+    cwnd: Optional[jnp.ndarray] = None
+    cwnd_ref: Optional[jnp.ndarray] = None
+    rate: Optional[jnp.ndarray] = None
+    rate_target: Optional[jnp.ndarray] = None
+    alpha: Optional[jnp.ndarray] = None
+    ack_seen: Optional[jnp.ndarray] = None
+    mark_seen: Optional[jnp.ndarray] = None
+    cc_timer: Optional[jnp.ndarray] = None
+    since_dec: Optional[jnp.ndarray] = None
+
+
+def rank_same_key(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = #{j < i : valid[j] and keys[j] == keys[i]} (serialization).
+
+    Sort-based O(P log P): stable-sort by key (invalid lanes pushed to the
+    end keep rank relative to nothing), then rank = position - group start.
+    Equivalent to the naive O(P^2) pairwise count (see §Perf R9); exactness
+    is covered by the simulator integrity tests.
+    """
+    n = keys.shape[0]
+    big = jnp.int32(jnp.iinfo(np.int32).max)
+    k = jnp.where(valid, keys, big)
+    order = jnp.argsort(k, stable=True)
+    ks = k[order]
+    pos = jnp.arange(n, dtype=I32)
+    new_group = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    group_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(new_group, pos, 0))
+    rank_sorted = pos - group_start
+    rank = jnp.zeros((n,), I32).at[order].set(rank_sorted)
+    # invalid lanes must rank as if absent; they never contribute, and their
+    # own rank is unused by callers, but keep parity with the naive version
+    return jnp.where(valid, rank, jnp.zeros((), I32)).astype(I32)
+
+
+def counts_per_key(keys, valid, num):
+    return jax.ops.segment_sum(valid.astype(I32), jnp.where(valid, keys, 0),
+                               num_segments=num)
+
+
+def hop_of_port(routes, f, p):
+    """Which hop of flow f's route is port p (f, p broadcastable)."""
+    return jnp.argmax(routes[f] == p[..., None], axis=-1).astype(I32)
+
+
+def derive(env: PhaseEnv, st, ops, topo) -> StepCtx:
+    """Phase 0: per-tick derived state.
+
+    Queue occupancy, per-switch buffer fill, the head-of-queue pause bits
+    from the received Bloom snapshot (re-evaluated every tick == "recompute
+    after every dequeue"), the dynamic per-queue pause threshold, PFC
+    hysteresis, and this tick's flow arrivals at the sources."""
+    pc, tm = env.cfg.proto, env.cfg.timing
+    P, Q, S, CAP = env.P, env.Q, env.S, env.CAP
+    p_ar = jnp.arange(P)
+    s_ar = jnp.arange(S)
+
+    t = st.t
+    occ = st.qtail - st.qhead                          # (P, Q)
+    port_occ = occ.sum(axis=1)                         # (P,)
+    sw_occ = jax.ops.segment_sum(
+        jnp.where(topo.port_is_nic, 0, port_occ),
+        jnp.maximum(topo.port_switch, 0), num_segments=env.NSW)  # (NSW,)
+
+    head_entry = jnp.take_along_axis(
+        st.qbuf, (st.qhead % CAP)[..., None], axis=2)[..., 0]   # (P, Q)
+    head_f = jnp.maximum(head_entry >> 1, 0)
+    if pc.backpressure:
+        head_pos = ops.fpos[head_f]                             # (P, Q, S)
+        got = st.bloom_rx[p_ar[:, None, None], s_ar[None, None, :],
+                          head_pos]                             # (P, Q, S)
+        qpaused = got.all(axis=-1) & (occ > 0)
+    else:
+        qpaused = jnp.zeros((P, Q), bool)
+
+    n_active = jnp.maximum(((occ > 0) & ~qpaused).sum(axis=1), 1)  # (P,)
+    th = jnp.maximum(
+        jnp.ceil(tm.pause_window / n_active.astype(jnp.float32)), 1.0
+    ).astype(I32)                                                  # (P,)
+
+    # PFC state (hysteresis: pause above th, resume below th/2)
+    if pc.pfc:
+        free_buf = jnp.maximum(topo.buffer_limit - sw_occ, 0)
+        pfc_th = jnp.maximum((pc.pfc_frac * free_buf).astype(I32), 2)
+        th_here = jnp.where(topo.feeds >= 0,
+                            pfc_th[jnp.maximum(topo.feeds, 0)],
+                            jnp.int32(1 << 30))
+        pfc_paused = jnp.where(st.pfc_paused,
+                               st.ing_occ > th_here // 2,
+                               st.ing_occ > th_here)
+    else:
+        pfc_paused = jnp.zeros((P,), bool)
+
+    # flow arrivals at sources
+    newly = ops.arrival == t
+    rem_src = st.rem_src + jnp.where(newly, ops.size, 0)
+
+    return StepCtx(t=t, occ=occ, port_occ=port_occ, sw_occ=sw_occ,
+                   qpaused=qpaused, th=th, pfc_paused=pfc_paused,
+                   rem_src=rem_src)

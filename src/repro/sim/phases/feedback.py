@@ -1,0 +1,90 @@
+"""Phase 5: feedback consumption + congestion-control law updates.
+
+Drains this tick's row of the delayed feedback rings (ACKs, ECN echoes,
+HPCC max-path-utilization, retransmit credits) and applies the configured
+end-host law: DCTCP's alpha-EWMA window cut, HPCC's reference-window
+utilization rule, or DCQCN's rate decrease / additive-increase timers.
+BFC itself needs none of this (cc='none'): the phase then only books ACKs
+and replays dropped packets."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ctx import PhaseEnv, StepCtx
+
+
+def feedback(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
+    pc, tm = env.cfg.proto, env.cfg.timing
+    t = ctx.t
+
+    row = t % env.RING
+    ack_ring, mark_ring, u_ring = ctx.ack_ring, ctx.mark_ring, ctx.u_ring
+    acks_now = ack_ring[row]
+    marks_now = mark_ring[row]
+    u_now = u_ring[row]
+    ack_ring = ack_ring.at[row].set(0)
+    mark_ring = mark_ring.at[row].set(0)
+    u_ring = u_ring.at[row].set(0.0)
+    acked = st.acked + acks_now
+    rrow = t % env.RRING
+    retx_ring = ctx.retx_ring
+    retx_now = retx_ring[rrow]
+    retx_ring = retx_ring.at[rrow].set(0)
+    rem_src = ctx.rem_src + retx_now
+    sent = ctx.sent - retx_now
+
+    cwnd, cwnd_ref, alpha = st.cwnd, st.cwnd_ref, st.alpha
+    ack_seen = st.ack_seen + acks_now
+    mark_seen = st.mark_seen + marks_now
+    cc_timer = st.cc_timer - 1
+    rate, rate_target, since_dec = st.rate, st.rate_target, st.since_dec
+    if pc.cc == "dctcp":
+        epoch = cc_timer <= 0
+        fracm = mark_seen.astype(jnp.float32) / jnp.maximum(ack_seen, 1)
+        alpha = jnp.where(epoch,
+                          (1 - pc.dctcp_g) * alpha + pc.dctcp_g * fracm,
+                          alpha)
+        cwnd = jnp.where(epoch & (mark_seen > 0),
+                         cwnd * (1 - alpha / 2), cwnd)
+        cwnd = jnp.where(epoch & (mark_seen == 0), cwnd + 1.0, cwnd)
+        cwnd = jnp.clip(cwnd, 1.0, float(pc.window_init))
+        ack_seen = jnp.where(epoch, 0, ack_seen)
+        mark_seen = jnp.where(epoch, 0, mark_seen)
+        cc_timer = jnp.where(epoch, tm.e2e_rtt_ticks, cc_timer)
+    elif pc.cc == "hpcc":
+        has_fb = acks_now > 0
+        u_norm = jnp.maximum(u_now, 1e-3) / pc.hpcc_eta
+        w_new = cwnd_ref / u_norm + pc.hpcc_wai
+        cwnd = jnp.where(has_fb,
+                         jnp.clip(w_new, 1.0, float(pc.window_init)), cwnd)
+        epoch = cc_timer <= 0
+        cwnd_ref = jnp.where(epoch, cwnd, cwnd_ref)
+        cc_timer = jnp.where(epoch, tm.e2e_rtt_ticks, cc_timer)
+    elif pc.cc == "dcqcn":
+        epoch = cc_timer <= 0
+        congested = mark_seen > 0
+        rate_target = jnp.where(epoch & congested, rate, rate_target)
+        rate = jnp.where(epoch & congested, rate * (1 - alpha / 2), rate)
+        alpha = jnp.where(
+            epoch,
+            jnp.where(congested,
+                      (1 - pc.dcqcn_alpha_g) * alpha + pc.dcqcn_alpha_g,
+                      (1 - pc.dcqcn_alpha_g) * alpha),
+            alpha)
+        since_dec = jnp.where(epoch & congested, 0, since_dec + 1)
+        inc = since_dec >= pc.dcqcn_timer
+        rate = jnp.where(inc, (rate + rate_target) / 2, rate)
+        rate_target = jnp.where(
+            inc, jnp.minimum(rate_target + pc.dcqcn_rai, 1.0), rate_target)
+        since_dec = jnp.where(inc, 0, since_dec)
+        rate = jnp.clip(rate, 1e-3, 1.0)
+        mark_seen = jnp.where(epoch, 0, mark_seen)
+        ack_seen = jnp.where(epoch, 0, ack_seen)
+        cc_timer = jnp.where(epoch, tm.e2e_rtt_ticks, cc_timer)
+
+    return ctx._replace(ack_ring=ack_ring, mark_ring=mark_ring,
+                        u_ring=u_ring, retx_ring=retx_ring, acked=acked,
+                        rem_src=rem_src, sent=sent, cwnd=cwnd,
+                        cwnd_ref=cwnd_ref, alpha=alpha, ack_seen=ack_seen,
+                        mark_seen=mark_seen, cc_timer=cc_timer, rate=rate,
+                        rate_target=rate_target, since_dec=since_dec)

@@ -1,0 +1,58 @@
+"""Phase 3: NIC transmissions (paper §3.4 source behavior).
+
+Each server runs deficit round-robin over its eligible flows (started, has
+work, not completed, not paused by the first-hop Bloom snapshot, not PFC
+paused, within its congestion window / rate-limiter budget) and transmits
+at most one packet per tick. Scores are packed into a per-server
+segment-min; padding-invariant because phantom flows are never eligible."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ctx import I32, PhaseEnv, StepCtx
+
+
+def nic_tx(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
+    pc = env.cfg.proto
+    F, NSRV, S = env.F, env.NSRV, env.S
+    s_ar = jnp.arange(S)
+    win_proto = pc.cc in ("dctcp", "hpcc", "fixed")
+    rate_proto = pc.cc == "dcqcn"
+
+    rem_src = ctx.rem_src
+    started = ops.arrival <= ctx.t
+    avail = started & (rem_src > 0) & (st.done < 0)
+    if pc.backpressure:
+        got_nic = ctx.bloom_rx[ops.routes[:, 0][:, None], s_ar[None, :],
+                               ops.fpos]                # (F, S)
+        nic_paused = got_nic.all(axis=-1)
+    else:
+        nic_paused = jnp.zeros((F,), bool)
+    elig_f = avail & ~nic_paused & ~ctx.pfc_paused[ops.routes[:, 0]]
+    if win_proto:
+        elig_f &= (st.sent - st.acked) < st.cwnd.astype(I32)
+    tokens = st.tokens
+    if rate_proto:
+        tokens = jnp.minimum(tokens + st.rate, 2.0)
+        elig_f &= tokens >= 1.0
+    # per-server DRR over flows (packed segment-min; F*F must fit int32)
+    f_ar = jnp.arange(F)
+    score = (f_ar - st.nic_ptr[ops.src]) % F
+    packed_f = jnp.where(elig_f, score * F + f_ar,
+                         jnp.iinfo(np.int32).max)
+    best_f = jax.ops.segment_min(packed_f, ops.src, num_segments=NSRV)
+    nic_can_tx = best_f < jnp.iinfo(np.int32).max
+    nic_sel = jnp.where(nic_can_tx, best_f % F, 0).astype(I32)
+    rem_src = rem_src.at[nic_sel].add(-nic_can_tx.astype(I32))
+    sent = st.sent.at[nic_sel].add(nic_can_tx.astype(I32))
+    if rate_proto:
+        tokens = tokens.at[nic_sel].add(-nic_can_tx.astype(jnp.float32))
+    nic_ptr = jnp.where(nic_can_tx, nic_sel + 1, st.nic_ptr)
+    tx_ewma = ctx.tx_ewma.at[jnp.arange(NSRV)].add(
+        nic_can_tx.astype(jnp.float32) / 32)
+
+    return ctx._replace(rem_src=rem_src, sent=sent, tokens=tokens,
+                        nic_ptr=nic_ptr, tx_ewma=tx_ewma,
+                        nic_tx=nic_can_tx, nic_sel=nic_sel)

@@ -1,0 +1,71 @@
+"""Phase 6: statistics + next-state assembly.
+
+Samples the switch-occupancy / active-flows-per-port / queue-length
+histograms every `stat_every` ticks (phantom ports and switches of a padded
+topology are masked out by `port_valid` / `switch_valid`, so padded runs
+keep bit-identical statistics), folds this tick's event counts into the
+running counters, and packs the next SimState plus the per-tick emit row
+(max buffer fill, PFC-paused ports, probe-flow progress)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ctx import I32, PhaseEnv, StepCtx
+
+
+def stats(env: PhaseEnv, st, ops, topo, ctx: StepCtx):
+    """Returns (new_state, emit[3]) — the scan carry and per-tick output."""
+    cfg = env.cfg
+    t = ctx.t
+
+    sample = (t % cfg.stat_every) == 0
+    occ_bin = jnp.clip(
+        ctx.sw_occ * cfg.occ_bins // jnp.maximum(topo.occ_ref, 1), 0,
+        cfg.occ_bins - 1)
+    occ_hist = st.occ_hist.at[occ_bin].add(
+        jnp.where(sample & topo.switch_valid, 1, 0))
+    # active flows per switch egress port (Fig. 10c)
+    active_fh = (ctx.f_cnt > 0) & (ops.routes >= 0)
+    per_port = jax.ops.segment_sum(
+        active_fh.astype(I32).reshape(-1),
+        jnp.maximum(ops.routes, 0).reshape(-1), num_segments=env.P)
+    fl_bin = jnp.clip(per_port, 0, cfg.flows_bins - 1)
+    flows_hist = st.flows_hist.at[fl_bin].add(
+        jnp.where(sample & ~topo.port_is_nic & topo.port_valid, 1, 0))
+    qlen_bin = jnp.clip(ctx.occ_new * cfg.occ_bins // max(env.CAP, 1), 0,
+                        cfg.occ_bins - 1)
+    qlen_hist = st.qlen_hist.at[qlen_bin.reshape(-1)].add(
+        jnp.where(sample & (ctx.occ_new.reshape(-1) > 0), 1, 0))
+
+    new_st = type(st)(
+        t=t + 1, rem_src=ctx.rem_src, sent=ctx.sent, acked=ctx.acked,
+        delivered=ctx.delivered, done=ctx.done, cwnd=ctx.cwnd,
+        cwnd_ref=ctx.cwnd_ref, rate=ctx.rate, rate_target=ctx.rate_target,
+        tokens=ctx.tokens, alpha=ctx.alpha, ack_seen=ctx.ack_seen,
+        mark_seen=ctx.mark_seen, cc_timer=ctx.cc_timer,
+        since_dec=ctx.since_dec, qbuf=ctx.qbuf, qhead=ctx.qhead,
+        qtail=ctx.qtail, qptr=ctx.qptr, qsrf=ctx.qsrf, f_q=ctx.f_q,
+        f_cnt=ctx.f_cnt, f_paused=ctx.f_paused, d_q=ctx.d_q,
+        d_cnt=ctx.d_cnt, bloom_counts=ctx.bloom_counts,
+        bloom_mid=ctx.bloom_mid, bloom_rx=ctx.bloom_rx, pl=ctx.pl,
+        pl_head=ctx.pl_head, pl_tail=ctx.pl_tail, ing_occ=ctx.ing_occ,
+        pfc_paused=ctx.pfc_paused, wire_f=ctx.wire_f,
+        wire_hop=ctx.wire_hop, tx_ewma=ctx.tx_ewma, ack_ring=ctx.ack_ring,
+        mark_ring=ctx.mark_ring, u_ring=ctx.u_ring,
+        retx_ring=ctx.retx_ring, nic_ptr=ctx.nic_ptr,
+        bucket_cnt=ctx.bucket_cnt,
+        stat_drops=st.stat_drops + ctx.dropped.sum().astype(I32),
+        stat_collisions=st.stat_collisions + ctx.collide.sum().astype(I32),
+        stat_allocs=st.stat_allocs + ctx.needs_alloc.sum().astype(I32),
+        stat_overflow=st.stat_overflow + ctx.overflow_ev,
+        stat_pauses=st.stat_pauses + ctx.n_pauses,
+        stat_pfc_ticks=st.stat_pfc_ticks
+        + ctx.pfc_paused.sum().astype(I32),
+        occ_hist=occ_hist, flows_hist=flows_hist, qlen_hist=qlen_hist,
+    )
+    probe = (st.delivered[cfg.probe_flow]
+             if cfg.probe_flow >= 0 else jnp.int32(0))
+    emit = jnp.stack([ctx.sw_occ.max().astype(I32),
+                      ctx.pfc_paused.sum().astype(I32), probe])
+    return new_st, emit

@@ -1,9 +1,11 @@
 """Named registry of the paper's experiment grid (+ beyond-paper scenarios).
 
-Each `Scenario` is a declarative grid over protocol x load x seed for one
-workload family. `cases()` expands a scenario into (label, SimConfig,
-FlowSet) triples that `sim.sweep.run_grid` executes with one compilation
-per protocol variant; `run()` is the one-call driver.
+Each `Scenario` is a declarative grid over protocol x topology x load x
+incast-degree x seed for one workload family. `cases()` expands a scenario
+into (label, SimConfig, FlowSet) triples — each case's fabric rides in its
+`SimConfig.clos` — that `sim.sweep.run_grid` executes with one compilation
+per protocol variant (topology, degree, load, and seed all ride the vmap
+batch axis); `run()` is the one-call driver.
 
 Registry:
   fig5_load_sweep         Fig. 5/16: BFC vs DCTCP across 50-90% load.
@@ -13,6 +15,14 @@ Registry:
                           traffic (probe throughput + short-flow tail).
   websearch_tail          DCTCP WebSearch distribution at moderate/high
                           load: heavy-tailed sizes stress tail latency.
+  fig17_incast_degree     Fig. 17: incast degree axis 4-64; queue
+                          exhaustion separates flow- from dest-keyed BFC.
+  oversub_sweep           Beyond-paper: 4:1 / 2:1 / 1:1 core
+                          oversubscription — per-hop backpressure vs e2e
+                          CC as the core thins (topology batch axis).
+  buffer_sweep            Beyond-paper: shallow -> deep switch buffers;
+                          BFC's margin grows as buffers shrink (topology
+                          batch axis via `buffer_limit` operand).
   rack_local_skew         Beyond-paper: 70% rack-local traffic; tests that
                           backpressure does not penalize intra-rack flows
                           when the core is quiet.
@@ -26,8 +36,13 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .config import PRESETS, SimConfig
-from .topology import ClosParams, Topology, build
-from .workload import FlowSet, WorkloadParams, generate
+from .topology import ClosParams, Topology, build, build_cached
+
+
+def topo_tag(clos: ClosParams) -> str:
+    """Short label component identifying a fabric in multi-topology grids."""
+    return (f"t{clos.n_tor}x{clos.n_spine}s{clos.n_servers}"
+            f"b{clos.switch_buffer_pkts}")
 
 
 @dataclass(frozen=True)
@@ -42,38 +57,81 @@ class Scenario:
     incast_load: float = 0.0
     incast_degree: int = 20
     incast_total_kb: int = 4000
+    # optional incast-degree axis (Fig. 17): overrides `incast_degree`, and
+    # when `incast_kb_per_flow` > 0 each degree's event size scales with it
+    # (aggregate = degree * kb_per_flow) so per-sender work stays constant.
+    incast_degrees: Tuple[int, ...] = ()
+    incast_kb_per_flow: int = 0
+    # optional topology axis: each entry becomes a batch lane (padded to a
+    # common TopoDims by sim.sweep); empty = the caller/driver's fabric.
+    topologies: Tuple[ClosParams, ...] = ()
     locality: float = 0.0
     long_lived: int = 0
     long_lived_pkts: int = 1 << 24
     drain_ticks: int = 20_000
+
+    def degree_axis(self) -> Tuple[int, ...]:
+        return self.incast_degrees or (self.incast_degree,)
+
+    def topology_axis(self, default: Optional[ClosParams]
+                      ) -> Tuple[ClosParams, ...]:
+        if self.topologies:
+            return self.topologies
+        return (default if default is not None else ClosParams(),)
 
     def grid(self) -> List[Tuple[str, float, int]]:
         return [(p, l, s) for p in self.protos for l in self.loads
                 for s in self.seeds]
 
     def flowset(self, topo: Topology, load: float, seed: int,
-                n_flows: Optional[int] = None) -> FlowSet:
+                n_flows: Optional[int] = None,
+                incast_degree: Optional[int] = None):
+        from .workload import WorkloadParams, generate
+        degree = (incast_degree if incast_degree is not None
+                  else self.incast_degree)
+        total_kb = self.incast_total_kb
+        if self.incast_kb_per_flow > 0:
+            total_kb = degree * self.incast_kb_per_flow
         wp = WorkloadParams(workload=self.workload, load=load,
                             incast_load=self.incast_load,
-                            incast_degree=self.incast_degree,
-                            incast_total_kb=self.incast_total_kb,
+                            incast_degree=degree,
+                            incast_total_kb=total_kb,
                             locality=self.locality, seed=seed)
         return generate(topo, wp, n_flows or self.n_flows,
                         long_lived=self.long_lived,
                         long_lived_pkts=self.long_lived_pkts)
 
-    def cases(self, topo: Topology, n_flows: Optional[int] = None,
+    def cases(self, topo: Optional[Topology] = None,
+              n_flows: Optional[int] = None,
               protos: Optional[Sequence[str]] = None,
-              ) -> List[Tuple[str, SimConfig, FlowSet]]:
+              ) -> List[Tuple[str, SimConfig, "object"]]:
         """Expand to (label, SimConfig, FlowSet); flow sets are generated
-        once per (load, seed) and shared across protocol variants."""
-        flowsets = {(l, s): self.flowset(topo, l, s, n_flows)
-                    for l in self.loads for s in self.seeds}
+        once per (topology, load, seed, degree) and shared across protocol
+        variants. With a `topologies` axis, `topo` is ignored and each lane
+        carries its own fabric in `SimConfig.clos`."""
+        closes = self.topology_axis(topo.params if topo is not None
+                                    else None)
+        degs = self.degree_axis()
+        flowsets = {}
+        for ci, clos in enumerate(closes):
+            t = (topo if topo is not None and clos == topo.params
+                 else build_cached(clos))
+            for l in self.loads:
+                for s in self.seeds:
+                    for d in degs:
+                        flowsets[(ci, l, s, d)] = self.flowset(
+                            t, l, s, n_flows, incast_degree=d)
         out = []
         for p in (protos or self.protos):
-            cfg = SimConfig(proto=PRESETS[p], clos=topo.params)
-            for (l, s), fl in flowsets.items():
-                label = f"{self.name}/{p}_load{int(l * 100)}_seed{s}"
+            for (ci, l, s, d), fl in flowsets.items():
+                cfg = SimConfig(proto=PRESETS[p], clos=closes[ci])
+                label = f"{self.name}/{p}"
+                if len(closes) > 1:
+                    label += f"_{topo_tag(closes[ci])}"
+                label += f"_load{int(l * 100)}"
+                if len(degs) > 1:
+                    label += f"_deg{d}"
+                label += f"_seed{s}"
                 out.append((label, cfg, fl))
         return out
 
@@ -101,11 +159,13 @@ def names() -> List[str]:
 
 def run(name_or_scenario, clos: Optional[ClosParams] = None,
         n_flows: Optional[int] = None, drain: Optional[int] = None,
-        unroll: int = 1):
+        unroll: int = 1, max_batch_bytes: Optional[int] = None):
     """Run one registry scenario through the batched sweep subsystem.
 
-    Returns a list of sweep.CaseResult (one per grid point), each carrying
-    per-config SimState, emits, and summarized RunMetrics."""
+    `clos` sets the fabric for scenarios without their own `topologies`
+    axis (scenarios WITH one pin their fabrics absolutely). Returns a list
+    of sweep.CaseResult (one per grid point), each carrying per-config
+    SimState, emits, and summarized RunMetrics."""
     from . import sweep
     sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
           else get(name_or_scenario))
@@ -114,7 +174,7 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
     return sweep.run_grid(topo, cases,
                           drain=(drain if drain is not None
                                  else sc.drain_ticks),
-                          unroll=unroll)
+                          unroll=unroll, max_batch_bytes=max_batch_bytes)
 
 
 # ---- the paper's grid --------------------------------------------------------
@@ -160,6 +220,14 @@ register(Scenario(
     workload="websearch", protos=("bfc", "hpcc", "dctcp"),
     loads=(0.6, 0.8), seeds=(2, 3)))
 
+register(Scenario(
+    name="fig17_incast_degree",
+    description="incast degree sweep 4-64 (Fig. 17): flow- vs dest-keyed "
+                "BFC queues vs HPCC as fan-in exhausts physical queues",
+    workload="fb_hadoop", protos=("bfc", "bfc_dest", "hpcc"),
+    loads=(0.55,), seeds=(17,), incast_load=0.05,
+    incast_degrees=(4, 8, 16, 32, 64), incast_kb_per_flow=200))
+
 # ---- beyond the paper --------------------------------------------------------
 register(Scenario(
     name="rack_local_skew",
@@ -175,3 +243,31 @@ register(Scenario(
     workload="google", protos=("bfc", "bfc_dest", "hpcc"),
     loads=(0.5, 0.7), seeds=(6,), incast_load=0.10, incast_degree=40,
     incast_total_kb=8000))
+
+register(Scenario(
+    name="oversub_sweep",
+    description="core oversubscription 4:1 / 2:1 / 1:1 (spine count axis): "
+                "per-hop backpressure vs e2e CC as the core thins; the "
+                "three fabrics ride one compiled program's batch axis",
+    workload="fb_hadoop", protos=("bfc", "dctcp"),
+    loads=(0.6,), seeds=(7,),
+    topologies=(ClosParams(n_servers=64, n_tor=8, n_spine=2,
+                           switch_buffer_pkts=8192),
+                ClosParams(n_servers=64, n_tor=8, n_spine=4,
+                           switch_buffer_pkts=8192),
+                ClosParams(n_servers=64, n_tor=8, n_spine=8,
+                           switch_buffer_pkts=8192))))
+
+register(Scenario(
+    name="buffer_sweep",
+    description="switch buffer 2MB -> 12MB: BFC's advantage concentrates "
+                "in shallow-buffer fabrics (buffer_limit is a traced "
+                "operand, so all sizes share one compilation)",
+    workload="fb_hadoop", protos=("bfc", "dctcp", "hpcc"),
+    loads=(0.6,), seeds=(13,), incast_load=0.05,
+    topologies=(ClosParams(n_servers=64, n_tor=8, n_spine=8,
+                           switch_buffer_pkts=2048),
+                ClosParams(n_servers=64, n_tor=8, n_spine=8,
+                           switch_buffer_pkts=4096),
+                ClosParams(n_servers=64, n_tor=8, n_spine=8,
+                           switch_buffer_pkts=12288))))

@@ -1,13 +1,13 @@
 """Batched experiment sweeps: one compiled simulator, a whole parameter grid.
 
-The paper's headline results are sweeps over protocol x workload x load x
-incast x seed. Compiling the ~700-line scan once per grid point dominated
-wall-clock; this module amortizes one XLA build across every grid point that
-shares a program signature (cf. the ns-3 sweep harnesses shipped with HPCC
-and BFC, which amortize one binary build over the whole grid).
+The paper's headline results are sweeps over protocol x topology x workload
+x load x incast x seed. Compiling the ~800-line scan once per grid point
+dominated wall-clock; this module amortizes one XLA build across every grid
+point that shares a program signature (cf. the ns-3 sweep harnesses shipped
+with HPCC and BFC, which amortize one binary build over the whole grid).
 
-Padding contract
-----------------
+Padding contracts
+-----------------
 Workloads in a batch are padded to a common flow count ``F_max`` (rounded up
 to ``pad_multiple`` so differently-sized grids still hit the same compiled
 program). Padded "phantom" flows are inert by construction:
@@ -18,29 +18,44 @@ program). Padded "phantom" flows are inert by construction:
 * ``size_pkts = 0`` — even if started it would have nothing to send;
 * ``routes = -1`` everywhere — a phantom is never looked up by any hop.
 
-Because phantoms never enter a queue, they never allocate physical queues,
-never touch the Bloom filters or the flow hash table, and never perturb any
-statistic: a padded run is bit-identical to the unpadded run of the same
-workload (tests/test_sim_padding.py), and a vmapped batch is bit-identical
-to the corresponding serial runs (tests/test_sim_sweep.py). The NIC's DRR
-arithmetic is padding-invariant because scores are order-isomorphic under a
-larger modulus when the extra lanes are ineligible.
+Topologies in a batch are likewise padded to a common ``TopoDims`` (max
+ports / servers / switches; ``prop_ticks`` must agree — it is a wire-ring
+shape). Phantom ports/switches/servers are inert by the mirror argument:
+no route names a phantom port, so it never holds occupancy and never
+transmits; phantom servers never source flows, so their NIC lane never wins
+the DRR segment-min; ``port_valid`` / ``switch_valid`` masks keep them out
+of the sampled histograms. Both padded runs are bit-identical to their
+unpadded serial counterparts (tests/test_sim_padding.py,
+tests/test_sim_topo_sweep.py), and a vmapped batch is bit-identical to the
+corresponding serial runs (tests/test_sim_sweep.py).
 
 Compile-cache contract
 ----------------------
-``engine.compiled_runner`` is keyed on (ClosParams, SimConfig, F, n_ticks,
-unroll, batched). One batched program is compiled per *protocol variant*
-(protocol flags are Python-level branches in the step, so e.g. BFC and DCTCP
-can never share a program); all seeds/loads/workloads of that variant ride
-the batch axis of a single compilation. `run_grid` therefore groups its
-cases by SimConfig and falls back to per-group (still batched) execution
-when a grid mixes protocol variants. `engine.trace_count()` counts actual
-XLA traces, which tests use to assert the one-compilation property.
+``engine.compiled_runner`` is keyed on (TopoDims, static_cfg(SimConfig), F,
+n_ticks, unroll, batched) — ClosParams is NOT part of the key; the fabric
+arrives as traced ``TopoOperands``. One batched program is compiled per
+*protocol variant* (protocol flags are Python-level branches in the phase
+pipeline, so e.g. BFC and DCTCP can never share a program); all topologies/
+seeds/loads/workloads of that variant ride the batch axis of a single
+compilation. `run_grid` therefore groups its cases by ``static_cfg`` and
+falls back to per-group (still batched) execution when a grid mixes
+protocol variants. `engine.trace_count()` counts actual XLA traces, which
+tests and scripts/trace_guard.py use to assert the one-compilation
+property.
+
+Memory budget
+-------------
+``run_batch(..., max_batch_bytes=...)`` estimates the per-lane SimState
+footprint (dominated by the F x H rings and the P x Q x CAP queue buffers)
+via ``lane_state_bytes`` and splits grids that would exceed the budget into
+equal-width chunks (the tail chunk padded with repeats of lane 0, results
+dropped) so every chunk reuses ONE compiled program instead of OOMing the
+device.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +64,8 @@ import numpy as np
 from . import engine, metrics
 from .config import SimConfig
 from .engine import FlowOperands, SimState
-from .topology import MAX_HOPS, Topology
+from .topology import (MAX_HOPS, TopoDims, TopoOperands, Topology,
+                       build_cached, pack_topo)
 from .workload import FlowSet
 
 # Default padding quantum for F_max: coarse enough that ragged grids share
@@ -64,6 +80,16 @@ _PER_FLOW_AXIS0 = {
     "cc_timer", "since_dec", "f_q", "f_cnt", "f_paused",
 }
 _PER_FLOW_AXIS1 = {"ack_ring", "mark_ring", "u_ring", "retx_ring"}
+# ... and the leaves carrying topology axes, trimmed back to a fabric's
+# true port/server/switch counts after a padded multi-topology run.
+_PER_PORT_AXIS0 = {
+    "qbuf", "qhead", "qtail", "qptr", "qsrf", "d_q", "d_cnt",
+    "bloom_counts", "bloom_mid", "bloom_rx", "pl", "pl_head", "pl_tail",
+    "ing_occ", "pfc_paused", "wire_f", "wire_hop", "tx_ewma",
+}
+_PER_SERVER_AXIS0 = {"nic_ptr"}
+_PER_SERVER_AXIS1 = {"d_q", "d_cnt"}
+_PER_SWITCH_AXIS0 = {"bucket_cnt"}
 
 
 def pad_flowset(flows: FlowSet, f_max: int) -> FlowSet:
@@ -108,9 +134,48 @@ def stack_operands(flowsets: Sequence[FlowSet], cfg: SimConfig,
     return FlowOperands(*[jnp.stack(leaves) for leaves in zip(*packed)])
 
 
-def trim_state(state: SimState, n_flows: int) -> SimState:
-    """Trim the per-flow leaves of an (unbatched) SimState to `n_flows`,
-    dropping the phantom-flow tail a padded run carries."""
+def _topo_list(topo: Union[Topology, Sequence[Topology]],
+               k: int) -> List[Topology]:
+    if isinstance(topo, Topology):
+        return [topo] * k
+    topos = list(topo)
+    if len(topos) != k:
+        raise ValueError(f"{len(topos)} topologies for {k} workloads")
+    return topos
+
+
+def batch_dims(topos: Sequence[Topology]) -> TopoDims:
+    """The common padded `TopoDims` of a (possibly mixed) topology batch."""
+    dims = TopoDims.of(topos[0])
+    for t in topos[1:]:
+        dims = dims.union(TopoDims.of(t))
+    return dims
+
+
+def stack_topos(topos: Sequence[Topology], cfg: SimConfig,
+                dims: TopoDims) -> TopoOperands:
+    """Pad every fabric to `dims` and stack operands on a batch axis."""
+    packed = [pack_topo(t, infinite_buffer=cfg.proto.infinite_buffer,
+                        dims=dims) for t in topos]
+    return TopoOperands(*[jnp.stack(leaves) for leaves in zip(*packed)])
+
+
+def lane_state_bytes(dims: TopoDims, cfg: SimConfig, n_flows: int,
+                     n_ticks: int = 0) -> int:
+    """Bytes one batch lane holds on device: the padded SimState (~F x H +
+    P x Q x CAP ints, measured exactly via eval_shape — no allocation) plus
+    its (T, 3) emit rows. Used to chunk grids against `max_batch_bytes`."""
+    init_state, _ = engine.make_step(dims, engine.static_cfg(cfg), n_flows)
+    leaves = jax.tree_util.tree_leaves(jax.eval_shape(init_state))
+    state = sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+    return state + n_ticks * 3 * 4
+
+
+def trim_state(state: SimState, n_flows: int,
+               dims: Optional[TopoDims] = None) -> SimState:
+    """Trim the per-flow — and, given `dims`, per-port/server/switch —
+    leaves of an (unbatched) SimState back to the workload's true F and the
+    fabric's true shapes, dropping the phantom tails a padded run carries."""
     out = {}
     for name, leaf in state._asdict().items():
         v = np.asarray(leaf)
@@ -118,32 +183,88 @@ def trim_state(state: SimState, n_flows: int) -> SimState:
             v = v[:n_flows]
         elif name in _PER_FLOW_AXIS1:
             v = v[:, :n_flows]
+        if dims is not None:
+            if name in _PER_PORT_AXIS0:
+                v = v[:dims.n_ports]
+            elif name in _PER_SERVER_AXIS0:
+                v = v[:dims.n_servers]
+            elif name in _PER_SWITCH_AXIS0:
+                v = v[:dims.n_switches]
+            if name in _PER_SERVER_AXIS1:
+                v = v[:, :dims.n_servers]
         out[name] = v
     return SimState(**out)
 
 
 def select_config(batched_state: SimState, k: int,
-                  n_flows: Optional[int] = None) -> SimState:
-    """Extract config `k` from a batched SimState, trimming per-flow leaves
-    back to the workload's true flow count so it is leaf-for-leaf comparable
-    with an unpadded serial `engine.run`."""
+                  n_flows: Optional[int] = None,
+                  dims: Optional[TopoDims] = None) -> SimState:
+    """Extract config `k` from a batched SimState, trimming per-flow (and,
+    given `dims`, per-port/server/switch) leaves back to the case's true
+    shapes so it is leaf-for-leaf comparable with an unpadded serial
+    `engine.run`."""
     lane = SimState(**{name: np.asarray(leaf)[k]
                        for name, leaf in batched_state._asdict().items()})
-    return trim_state(lane, n_flows) if n_flows is not None else lane
+    if n_flows is None and dims is None:
+        return lane
+    return trim_state(lane, n_flows if n_flows is not None
+                      else lane.done.shape[0], dims)
 
 
-def run_batch(topo: Topology, flowsets: Sequence[FlowSet], cfg: SimConfig,
-              n_ticks: int, unroll: int = 1,
-              pad_multiple: int = PAD_MULTIPLE):
+def run_batch(topo: Union[Topology, Sequence[Topology]],
+              flowsets: Sequence[FlowSet], cfg: SimConfig, n_ticks: int,
+              unroll: int = 1, pad_multiple: int = PAD_MULTIPLE,
+              max_batch_bytes: Optional[int] = None):
     """Run K workloads under one protocol config as a single vmapped,
-    jitted program. Returns (batched_state, emits[K, T, 3]); use
-    `select_config` to view one lane."""
+    jitted program. `topo` is one Topology shared by every lane or a
+    per-lane sequence (mixed fabrics are padded to a common `TopoDims`, so
+    topology rides the batch axis of the SAME compilation). Returns
+    (batched_state, emits[K, T, 3]); use `select_config` to view one lane.
+
+    `max_batch_bytes` caps the device-resident SimState footprint: grids
+    whose K x `lane_state_bytes` exceed it run as equal-width chunks of one
+    shared executable (tail chunk padded by repeating lane 0)."""
+    K = len(flowsets)
+    topos = _topo_list(topo, K)
+    dims = batch_dims(topos)
     f_max = padded_count(flowsets, pad_multiple)
     n_ticks = int(np.ceil(n_ticks / unroll) * unroll)
-    go = engine.compiled_runner(topo.params, cfg, f_max, n_ticks, unroll,
-                                batched=True)
-    st, emits = go(stack_operands(flowsets, cfg, f_max))
-    return jax.device_get(st), np.asarray(emits)
+
+    width = K
+    if max_batch_bytes is not None:
+        per_lane = lane_state_bytes(dims, cfg, f_max, n_ticks)
+        width = int(max(1, min(K, max_batch_bytes // max(per_lane, 1))))
+
+    go = engine.compiled_runner(dims, engine.static_cfg(cfg), f_max,
+                                n_ticks, unroll, batched=True)
+
+    def run_lanes(fsets, tps):
+        return go(stack_operands(fsets, cfg, f_max),
+                  stack_topos(tps, cfg, dims))
+
+    if width >= K:
+        st, emits = run_lanes(flowsets, topos)
+        return jax.device_get(st), np.asarray(emits)
+
+    # chunked execution: every chunk has `width` lanes (tail padded with
+    # repeats of lane 0, padded results dropped) so ALL chunks share the
+    # one compiled program; chunks run serially to respect the budget.
+    states, emits_all = [], []
+    for lo in range(0, K, width):
+        fsets = list(flowsets[lo:lo + width])
+        tps = topos[lo:lo + width]
+        n_real = len(fsets)
+        fsets += [flowsets[0]] * (width - n_real)
+        tps = tps + [topos[0]] * (width - n_real)
+        st, emits = run_lanes(fsets, tps)
+        st = jax.device_get(st)
+        states.append(SimState(**{n: np.asarray(v)[:n_real]
+                                  for n, v in st._asdict().items()}))
+        emits_all.append(np.asarray(emits)[:n_real])
+    merged = SimState(**{
+        name: np.concatenate([np.asarray(getattr(s, name)) for s in states])
+        for name in SimState._fields})
+    return merged, np.concatenate(emits_all)
 
 
 @dataclass
@@ -153,44 +274,69 @@ class CaseResult:
     proto: str
     cfg: SimConfig
     flows: FlowSet
-    state: SimState            # per-flow leaves trimmed to flows.n_flows
+    state: SimState            # per-flow/topo leaves trimmed to true shapes
     emits: np.ndarray          # (T, 3)
     metrics: Optional[metrics.RunMetrics] = None
+
+
+def _case_topo(cfg: SimConfig, default: Topology) -> Topology:
+    """The fabric a case runs on: its own `cfg.clos` (the topology is part
+    of the per-case configuration now), materialized through the build
+    cache; `default` is reused when it already matches."""
+    if cfg.clos == default.params:
+        return default
+    return build_cached(cfg.clos)
 
 
 def run_grid(topo: Topology,
              cases: Sequence[Tuple[str, SimConfig, FlowSet]],
              n_ticks: Optional[int] = None, drain: int = 20_000,
              unroll: int = 1, pad_multiple: int = PAD_MULTIPLE,
-             summarize: bool = True) -> List[CaseResult]:
+             summarize: bool = True,
+             max_batch_bytes: Optional[int] = None) -> List[CaseResult]:
     """Run an arbitrary (label, SimConfig, FlowSet) grid.
 
-    Cases are grouped by SimConfig: each group runs as ONE vmapped
-    compilation (the serial fallback across protocol variants — their
-    Python-level branches produce different programs by construction).
-    All groups share `n_ticks` (default: max horizon + drain) so same-shaped
-    protocol groups can still share executables across calls."""
+    Each case runs on the fabric named by its own ``cfg.clos`` (``topo`` is
+    the default/fallback instance for cases that match it). Cases are
+    grouped by ``engine.static_cfg``: each group — including MIXED
+    topologies, which are padded to a common `TopoDims` — runs as ONE
+    vmapped compilation (the serial fallback across protocol variants —
+    their Python-level branches produce different programs by
+    construction). All groups share `n_ticks` (default: max horizon +
+    drain) so same-shaped protocol groups can still share executables
+    across calls."""
     if n_ticks is None:
         n_ticks = int(max(f.horizon for _, _, f in cases) + drain)
-    groups: Dict[SimConfig, List[int]] = {}
+    # group key: the compile signature — protocol/timing config plus the
+    # one topology field that is a shape (prop_ticks), NOT ClosParams
+    groups: Dict[tuple, List[int]] = {}
     for i, (_, cfg, _) in enumerate(cases):
-        groups.setdefault(cfg, []).append(i)
+        groups.setdefault((engine.static_cfg(cfg), cfg.clos.prop_ticks),
+                          []).append(i)
 
+    topos = [_case_topo(cfg, topo) for _, cfg, _ in cases]
     results: List[Optional[CaseResult]] = [None] * len(cases)
-    for cfg, idxs in groups.items():
+    for idxs in groups.values():
         flowsets = [cases[i][2] for i in idxs]
-        st, emits = run_batch(topo, flowsets, cfg, n_ticks, unroll,
-                              pad_multiple)
+        group_topos = [topos[i] for i in idxs]
+        cfg = cases[idxs[0]][1]
+        st, emits = run_batch(group_topos, flowsets, cfg, n_ticks, unroll,
+                              pad_multiple, max_batch_bytes=max_batch_bytes)
         for k, i in enumerate(idxs):
-            label, _, flows = cases[i]
-            state_k = select_config(st, k, flows.n_flows)
+            label, case_cfg, flows = cases[i]
+            case_topo = group_topos[k]
+            state_k = select_config(st, k, flows.n_flows,
+                                    TopoDims.of(case_topo))
             m = None
             if summarize:
                 m = metrics.summarize(
-                    label, state_k, emits[k], flows, n_links=topo.n_ports,
-                    occ_bin_ref=topo.params.switch_buffer_pkts,
-                    cap=cfg.proto.queue_cap)
-            results[i] = CaseResult(label=label, proto=cfg.proto.name,
-                                    cfg=cfg, flows=flows, state=state_k,
-                                    emits=emits[k], metrics=m)
+                    label, state_k, emits[k], flows,
+                    n_links=case_topo.n_ports,
+                    occ_bin_ref=case_topo.params.switch_buffer_pkts,
+                    cap=case_cfg.proto.queue_cap)
+            results[i] = CaseResult(label=label, proto=case_cfg.proto.name,
+                                    cfg=case_cfg, flows=flows,
+                                    state=state_k, emits=emits[k],
+                                    metrics=m)
     return results
+

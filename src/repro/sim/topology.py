@@ -19,8 +19,11 @@ A flow's route is the sequence of egress ports it is *transmitted from*:
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
+import jax.numpy as jnp
 import numpy as np
 
 MAX_HOPS = 4
@@ -128,6 +131,118 @@ def routes_for_flows(topo: Topology, src: np.ndarray, dst: np.ndarray,
     routes[inter, 2] = topo.spine_down_port(sp, d_tor[inter])
     routes[inter, 3] = topo.tor_down_port(d_tor[inter], dst[inter])
     return routes
+
+
+# Cached variant for callers that rebuild the same fabric repeatedly (the
+# sweep subsystem derives a per-case Topology from each SimConfig.clos).
+# Topology is treated as immutable after build(); callers must not mutate.
+build_cached = functools.lru_cache(maxsize=None)(build)
+
+
+class TopoDims(NamedTuple):
+    """The topology-derived *shapes* of the compiled simulator program.
+
+    Everything else about a fabric (port->switch map, PFC feed graph, buffer
+    limit) is a traced `TopoOperands`; only these dims — plus the protocol /
+    timing config — key the XLA compile cache. Two fabrics with equal dims
+    share one executable, and `sweep.py` pads a mixed-topology batch up to a
+    common `TopoDims` so topology can ride the vmap batch axis."""
+    n_ports: int
+    n_servers: int
+    n_switches: int
+    prop_ticks: int
+
+    @classmethod
+    def of(cls, topo: Topology) -> "TopoDims":
+        return cls(n_ports=topo.n_ports, n_servers=topo.params.n_servers,
+                   n_switches=topo.n_switches,
+                   prop_ticks=topo.params.prop_ticks)
+
+    def union(self, other: "TopoDims") -> "TopoDims":
+        if self.prop_ticks != other.prop_ticks:
+            raise ValueError(
+                "topologies in one batch must share prop_ticks "
+                f"({self.prop_ticks} != {other.prop_ticks}): link delay is a "
+                "wire-ring shape, not a traced operand")
+        return TopoDims(n_ports=max(self.n_ports, other.n_ports),
+                        n_servers=max(self.n_servers, other.n_servers),
+                        n_switches=max(self.n_switches, other.n_switches),
+                        prop_ticks=self.prop_ticks)
+
+
+class TopoOperands(NamedTuple):
+    """Per-fabric tables fed to the jitted step as traced operands.
+
+    Shapes are fixed by `TopoDims` per compiled program: (P,) / (NSW,) / ().
+    `sweep.py` stacks these along a leading batch axis (next to
+    `engine.FlowOperands`) so one compilation serves a whole
+    topology x workload x seed grid. Per-flow routing tables ride in
+    `FlowOperands.routes` — flows are generated against their lane's fabric —
+    so `TopoOperands` only carries flow-independent port/switch tables.
+
+    Padding contract (mirrors the phantom-flow contract in `sweep.py`):
+    ports / servers / switches appended beyond a fabric's real counts are
+    inert phantoms. A phantom port never holds occupancy (no route names it),
+    never transmits (occupancy gates eligibility), and is masked out of
+    port-keyed statistics by `port_valid`; a phantom switch accumulates no
+    occupancy and is masked out of `occ_hist` by `switch_valid`; a phantom
+    server never sources flows, so its NIC lane never wins the DRR
+    segment-min. A padded run is bit-identical to the unpadded run
+    (tests/test_sim_topo_sweep.py)."""
+    port_switch: jnp.ndarray   # (P,) owning switch; -1 for NIC + phantom
+    port_is_nic: jnp.ndarray   # (P,) bool
+    port_valid: jnp.ndarray    # (P,) bool, False for phantom padding
+    feeds: jnp.ndarray         # (P,) switch fed by the port; -1 = a server
+    switch_valid: jnp.ndarray  # (NSW,) bool, False for phantom padding
+    buffer_limit: jnp.ndarray  # () i32 drop threshold (huge if infinite)
+    occ_ref: jnp.ndarray       # () i32 occupancy-histogram reference scale
+
+
+def pack_topo(topo: Topology, *, infinite_buffer: bool = False,
+              dims: "TopoDims | None" = None) -> TopoOperands:
+    """Derive the traced operand bundle for `topo`, padded to `dims`.
+
+    `feeds[p]` is the switch whose buffer grows when port p transmits (PFC
+    and buffer accounting): NIC -> its ToR, ToR up-port -> the spine, spine
+    down-port -> the ToR; ToR down-ports feed servers (-1)."""
+    p0 = topo.params
+    dims = dims or TopoDims.of(topo)
+    if dims.prop_ticks != p0.prop_ticks:
+        raise ValueError("dims.prop_ticks != topo prop_ticks")
+    P, NSW = dims.n_ports, dims.n_switches
+    if P < topo.n_ports or NSW < topo.n_switches \
+            or dims.n_servers < p0.n_servers:
+        raise ValueError(f"dims {dims} smaller than topology")
+
+    port_switch = np.full(P, -1, np.int32)
+    port_switch[:topo.n_ports] = topo.port_switch
+    port_is_nic = np.zeros(P, bool)
+    port_is_nic[:topo.n_ports] = topo.port_is_nic
+    port_valid = np.zeros(P, bool)
+    port_valid[:topo.n_ports] = True
+    switch_valid = np.zeros(NSW, bool)
+    switch_valid[:topo.n_switches] = True
+
+    feeds = np.full(P, -1, np.int32)
+    for s in range(p0.n_servers):
+        feeds[s] = s // p0.servers_per_tor                    # NIC -> its ToR
+    for tor in range(p0.n_tor):
+        for sp in range(p0.n_spine):
+            feeds[int(topo.tor_up_port(tor, sp))] = p0.n_tor + sp
+        # ToR down-ports feed servers: stays -1
+    for sp in range(p0.n_spine):
+        for tor in range(p0.n_tor):
+            feeds[int(topo.spine_down_port(sp, tor))] = tor
+
+    buffer_limit = (1 << 29) if infinite_buffer else p0.switch_buffer_pkts
+    return TopoOperands(
+        port_switch=jnp.asarray(port_switch),
+        port_is_nic=jnp.asarray(port_is_nic),
+        port_valid=jnp.asarray(port_valid),
+        feeds=jnp.asarray(feeds),
+        switch_valid=jnp.asarray(switch_valid),
+        buffer_limit=jnp.int32(buffer_limit),
+        occ_ref=jnp.int32(p0.switch_buffer_pkts))
 
 
 def path_prop_ticks(routes: np.ndarray, prop_ticks: int) -> np.ndarray:
