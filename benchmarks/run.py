@@ -2,8 +2,10 @@
 Prints ``name,metric,value`` CSV. Set BENCH_FULL=1 for paper-scale topology;
 use --only substring to filter. ``--scenario NAME`` (or ``all``) runs any
 entry of the experiment registry (repro.sim.scenarios) through the batched
-sweep subsystem instead of the figure list; ``--list-scenarios`` shows the
-registry."""
+sweep subsystem instead of the figure list, records the perf trajectory as
+``BENCH_sweep.json`` (``--bench-json`` to relocate, ``--spool-dir`` to also
+spool per-chunk results), and ends with a one-line per-scenario summary
+table; ``--list-scenarios`` shows the registry."""
 from __future__ import annotations
 
 import argparse
@@ -12,30 +14,59 @@ import time
 import traceback
 
 
-def run_scenarios(which: str) -> None:
-    """Nightly mode: run registry scenarios through the batched sweep and
-    make compile-count regressions visible — each scenario reports its grid
-    size and XLA trace delta (which must stay at the number of protocol
-    variants, never scale with topologies/loads/degrees/seeds), and the
-    run ends with the total `engine.trace_count()`."""
+def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
+                  spool_dir: str = "", **overrides) -> None:
+    """Nightly mode: run registry scenarios through the exec-planned
+    batched sweep and record the perf trajectory — each scenario reports
+    its grid size, wall time, lanes/sec, device count, and XLA trace delta
+    (which must stay at the number of protocol variants, never scale with
+    topologies/loads/degrees/seeds); the run store writes it all to
+    `BENCH_sweep.json` and the run ends with a per-scenario summary table
+    plus the total `engine.trace_count()`."""
+    import tempfile
+
+    import jax
+
     from .common import emit, emit_fct_table, run_scenario
     from repro.sim import engine, scenarios
+    from repro.sim import exec as exec_
+
+    # records-only runs root the store in a scratch dir: rooting at "."
+    # would reattach any stale manifest.json lying in the cwd
+    store = exec_.RunStore(spool_dir
+                           or tempfile.mkdtemp(prefix="bench_store_"))
     names = scenarios.names() if which == "all" else [which]
     grid_points = 0
     for name in names:
         print(f"# === scenario {name} ===", flush=True)
         t0 = time.time()
         before = engine.trace_count()
-        results = run_scenario(name)
+        results = run_scenario(name, store=store if spool_dir else None,
+                               **overrides)
+        wall = time.time() - t0
+        compiles = engine.trace_count() - before
         grid_points += len(results)
         for r in results:
             emit_fct_table(r.label.replace("/", "_"), r.metrics)
+        plan = exec_.last_plan()
+        rec = store.record_scenario(
+            name, wall_s=wall, grid_points=len(results),
+            xla_compilations=compiles,
+            device_count=plan.n_devices if plan else 1,
+            chunk_width=plan.chunk_width if plan else len(results),
+            budget_source=plan.budget_source if plan else "unknown")
         emit(f"scenario_{name}", "grid_points", len(results))
-        emit(f"scenario_{name}", "xla_compilations",
-             engine.trace_count() - before)
-        emit(f"scenario_{name}", "wall_s", round(time.time() - t0, 1))
+        emit(f"scenario_{name}", "xla_compilations", compiles)
+        emit(f"scenario_{name}", "wall_s", round(wall, 1))
+        emit(f"scenario_{name}", "lanes_per_sec", rec["lanes_per_sec"])
+        emit(f"scenario_{name}", "device_count", rec["device_count"])
     emit("scenarios", "grid_points_total", grid_points)
     emit("scenarios", "xla_compilations", engine.trace_count())
+    path = store.write_bench(bench_json,
+                             platform=jax.devices()[0].platform,
+                             device_count=len(jax.devices()))
+    print(f"# wrote {path}", flush=True)
+    print(store.summary_table(), flush=True)
 
 
 def main() -> None:
@@ -45,6 +76,17 @@ def main() -> None:
     ap.add_argument("--scenario", default="",
                     help="run one registry scenario (or 'all') through the "
                          "batched sweep instead of the figure list")
+    ap.add_argument("--bench-json", default="BENCH_sweep.json",
+                    help="where --scenario writes the perf-trajectory "
+                         "record (default: ./BENCH_sweep.json)")
+    ap.add_argument("--spool-dir", default="",
+                    help="also spool every landed chunk's raw results "
+                         "under DIR/chunks (off by default)")
+    ap.add_argument("--n-flows", type=int, default=None,
+                    help="override scenario flow count (smoke-test the "
+                         "nightly at reduced scale)")
+    ap.add_argument("--drain", type=int, default=None,
+                    help="override post-horizon drain ticks")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -55,7 +97,11 @@ def main() -> None:
             print(f"{n}: {scenarios.get(n).description}")
         return
     if args.scenario:
-        run_scenarios(args.scenario)
+        overrides = {k: v for k, v in
+                     (("n_flows", args.n_flows), ("drain", args.drain))
+                     if v is not None}
+        run_scenarios(args.scenario, bench_json=args.bench_json,
+                      spool_dir=args.spool_dir, **overrides)
         return
 
     from . import paper_figs, micro

@@ -1,5 +1,5 @@
 """The whole paper grid — topologies included — in one compiled simulator
-per protocol variant.
+per protocol variant, placed on hardware by the execution planner.
 
 Runs a miniature multi-TOPOLOGY, multi-seed slice of the experiment
 registry (`repro.sim.scenarios`) through the batched sweep subsystem:
@@ -9,19 +9,59 @@ vmapped XLA program. Mixed fabrics are padded to a common `TopoDims`
 (phantom ports/switches are inert), so compilation cost scales with the
 number of protocol variants only, never with the grid.
 
+Where that program *runs* is decided by `repro.sim.exec`: the planner
+reads live device/host memory stats to pick a chunk width (no
+`max_batch_bytes` guessing) and the dispatcher shards each chunk's lanes
+across the local devices — same executable, same bits, more hardware.
+
     PYTHONPATH=src python examples/sweep_grid.py
+
+    # let the planner derive the byte budget from live memory stats:
+    PYTHONPATH=src python examples/sweep_grid.py --auto-budget
+
+    # shard the grid across 4 (simulated, for CPU) devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/sweep_grid.py --devices 4
 """
+import argparse
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.sim import engine, scenarios, sweep, topology
-from repro.sim.topology import ClosParams
-
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="shard grid lanes across the first N local "
+                         "devices (default: all; simulate N CPU devices "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
+    ap.add_argument("--auto-budget", action="store_true",
+                    help="let the planner derive the device byte budget "
+                         "from live memory stats instead of running the "
+                         "grid uncapped")
+    ap.add_argument("--max-batch-bytes", type=int, default=None,
+                    help="explicit device byte budget (overrides "
+                         "--auto-budget)")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.sim import engine, scenarios, sweep, topology
+    from repro.sim import exec as exec_
+    from repro.sim.topology import ClosParams
+
+    devices = None
+    if args.devices:
+        avail = jax.devices()
+        if args.devices > len(avail):
+            ap.error(f"--devices {args.devices} but only {len(avail)} "
+                     "local device(s); simulate more with XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count={args.devices}")
+        devices = avail[:args.devices]
+
     fabrics = (ClosParams(n_servers=16, n_tor=2, n_spine=2,
                           switch_buffer_pkts=2048),     # 4:1 oversub
                ClosParams(n_servers=16, n_tor=2, n_spine=4,
@@ -43,7 +83,10 @@ def main():
 
     t0 = time.time()
     before = engine.trace_count()
-    results = sweep.run_grid(topo, cases, drain=4000)
+    results = sweep.run_grid(topo, cases, drain=4000, devices=devices,
+                             auto_budget=args.auto_budget,
+                             max_batch_bytes=args.max_batch_bytes)
+    wall = time.time() - t0
     print(f"{'grid point':>42} {'p50':>7} {'p95':>7} {'p99':>7}")
     for r in results:
         m = r.metrics
@@ -51,12 +94,16 @@ def main():
               f"{m.fct_slowdown_p50:>7.2f} {m.fct_slowdown_p95:>7.2f} "
               f"{m.fct_slowdown_p99:>7.2f}")
 
-    print(f"\n{n_points} simulations on {len(fabrics)} distinct fabrics, "
+    plan = exec_.last_plan()
+    print(f"\n{plan.describe()}")
+    print(f"{n_points} simulations on {len(fabrics)} distinct fabrics, "
           f"{engine.trace_count() - before} XLA compilations, "
-          f"{time.time() - t0:.1f}s wall")
-    print("Topology is a traced operand: spine count and buffer depth ride "
-          "the batch axis, so compilation cost no longer scales with the "
-          "grid — only with the protocol list.")
+          f"{wall:.1f}s wall ({n_points / wall:.2f} lanes/s) on "
+          f"{plan.n_devices} device(s)")
+    print("Topology is a traced operand and placement is planned: spine "
+          "count and buffer depth ride the batch axis of one compilation, "
+          "and the planner shards that one program across every device it "
+          "can see.")
 
 
 if __name__ == "__main__":

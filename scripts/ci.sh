@@ -9,11 +9,24 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# The exec-layer tests run in their own pytest process with 4 simulated
+# host devices so the multi-device sharded dispatch path is exercised on
+# CPU (the flag must be set before jax initializes; trace_guard.py forces
+# its own copy). The same tests also pass single-device under a plain
+# `pytest` run.
+exec_tests() {
+  XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -x -q -m "not slow" tests/test_sim_exec.py
+}
+
 case "${1:-tier1}" in
   tier1) python scripts/trace_guard.py
-         exec python -m pytest -x -q -m "not slow" ;;
+         exec_tests
+         exec python -m pytest -x -q -m "not slow" \
+              --ignore=tests/test_sim_exec.py ;;
   slow)  exec python -m pytest -q -m "slow" ;;
   all)   python scripts/trace_guard.py
-         exec python -m pytest -x -q ;;
+         exec_tests
+         exec python -m pytest -x -q --ignore=tests/test_sim_exec.py ;;
   *)     echo "usage: $0 [tier1|slow|all]" >&2; exit 2 ;;
 esac

@@ -1,24 +1,44 @@
 #!/usr/bin/env python
 """Tier-1 compile-count guard: a 2-topology x 2-seed mini-grid through the
-batched sweep subsystem must trigger exactly ONE XLA trace.
+batched sweep subsystem must trigger exactly ONE XLA trace — including on
+the multi-device sharded path.
 
 Topology is a traced operand (`TopoOperands`) of one compiled simulator, so
 compilation cost scales with the number of protocol variants only — never
-with topologies, seeds, or loads. This script is the cheap canary
+with topologies, seeds, or loads. The execution planner (`sim/exec`) must
+preserve that: sharding a chunk's lanes across devices is SPMD partitioning
+of the ONE cached executable (never per-device jits), and every chunk of a
+budget-split grid reuses it. This script forces 4 simulated host devices,
+runs the grid once through the default auto plan (sharded when multi-device)
+and once through a deliberately chunked 2-device plan, and asserts one
+trace total plus bit-identical results. It is the cheap canary
 scripts/ci.sh runs on every tier-1 invocation; the full bit-identity
-matrix lives in tests/test_sim_topo_sweep.py."""
+matrix lives in tests/test_sim_topo_sweep.py and tests/test_sim_exec.py."""
 import os
 import sys
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# an ambient byte budget would change the auto plan (and so the guard's
+# expected chunking/sharding) without any code regressing — pin it off
+os.environ.pop("REPRO_EXEC_MAX_BYTES", None)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        ("--xla_force_host_platform_device_count=4 " + _flags).strip()
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import numpy as np  # noqa: E402
+
 from repro.sim import engine, sweep, topology, workload  # noqa: E402
+from repro.sim import exec as exec_  # noqa: E402
 from repro.sim.config import BFC, SimConfig  # noqa: E402
 from repro.sim.topology import ClosParams  # noqa: E402
 
 
 def main() -> None:
+    import jax
+    n_dev = len(jax.devices())
+
     fabrics = (ClosParams(n_servers=8, n_tor=2, n_spine=2,
                           switch_buffer_pkts=512),
                ClosParams(n_servers=12, n_tor=2, n_spine=3,
@@ -34,19 +54,57 @@ def main() -> None:
             cases.append((f"guard_{clos.n_spine}sp_s{seed}",
                           SimConfig(proto=BFC, clos=clos), flows))
 
+    # 1) default auto plan: all devices, planner-derived budget
     before = engine.trace_count()
     results = sweep.run_grid(topology.build_cached(fabrics[0]), cases,
                              n_ticks=512, summarize=False)
     traces = engine.trace_count() - before
+    plan = exec_.last_plan()
     assert len(results) == 4
     assert all(r.state is not None for r in results)
+    if n_dev > 1:
+        assert plan.sharded and plan.chunk_width % plan.n_devices == 0, \
+            plan.describe()
     if traces != 1:
-        print(f"TRACE GUARD FAILED: {len(cases)}-case 2-topology grid "
-              f"compiled {traces}x (expected exactly 1). A compile-cache "
-              "key or operand regressed into a closure constant.")
+        print(f"TRACE GUARD FAILED: {len(cases)}-case 2-topology grid on "
+              f"{plan.n_devices} device(s) compiled {traces}x (expected "
+              "exactly 1). A compile-cache key, operand, or the sharded "
+              "dispatch path regressed into per-device programs.")
         sys.exit(1)
+
+    # 2) forced chunked + sharded plan (2 chunks x 2 lanes, each sharded
+    # over 2 devices): every chunk must reuse the same executable and
+    # match run (1) bit-for-bit
+    import dataclasses
+
+    import jax as _jax
+    flowsets = [flows for _, _, flows in cases]
+    topos = [topology.build_cached(cfg.clos) for _, cfg, _ in cases]
+    dims = sweep.batch_dims(topos)
+    f_max = sweep.padded_count(flowsets)
+    cfg0 = cases[0][1]
+    ch_plan = dataclasses.replace(
+        exec_.plan(dims, cfg0, f_max, 512, len(cases), budget=None,
+                   devices=_jax.devices()[:min(2, n_dev)]),
+        chunk_width=2)
+    assert ch_plan.n_chunks == 2, ch_plan.describe()
+    before = engine.trace_count()
+    _, ch_emits = sweep.run_batch(topos, flowsets, cfg0, 512, plan=ch_plan)
+    ch_traces = engine.trace_count() - before
+    if ch_traces > 1:
+        print(f"TRACE GUARD FAILED: chunked exec plan "
+              f"({ch_plan.describe()}) compiled {ch_traces}x (expected "
+              "<= 1: all chunks share one program).")
+        sys.exit(1)
+    for r, em in zip(results, ch_emits):
+        assert np.array_equal(r.emits, em), \
+            f"{r.label}: chunked/sharded emits diverge from auto plan"
+
     print(f"trace guard ok: {len(cases)} grid points "
-          f"(2 topologies x 2 seeds), {traces} XLA trace")
+          f"(2 topologies x 2 seeds) on {plan.n_devices} device(s), "
+          f"{traces} XLA trace; chunked plan "
+          f"({ch_plan.n_chunks} x {ch_plan.chunk_width} lanes on "
+          f"{ch_plan.n_devices} dev) added {ch_traces} trace(s)")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
 """Packet-level network simulator: the paper's evaluation substrate in JAX."""
 from . import (config, engine, metrics, scenarios, sweep, topology,  # noqa: F401
                workload)
+from . import exec  # noqa: F401  (execution layer; after sweep — they interop)

@@ -1,0 +1,24 @@
+"""Device-aware execution layer for the batched sweep subsystem.
+
+`sim/sweep.py` decides *what* runs (padding contracts, operand stacking,
+one compilation per protocol variant); this package decides *where and how
+fast* it runs:
+
+* `planner`  — reads live device stats (`jax.devices()`, `memory_stats()`,
+  host MemAvailable) and the measured per-lane SimState footprint to derive
+  an `ExecPlan`: chunk width, device set, pipeline depth. No more
+  caller-guessed `max_batch_bytes`.
+* `dispatch` — executes a plan: each chunk's lanes shard evenly across the
+  devices via a batch-axis `NamedSharding` of the ONE cached executable,
+  and chunks double-buffer so host readback overlaps device compute.
+* `store`    — spools landed chunks to disk incrementally and records the
+  perf trajectory as `BENCH_sweep.json`.
+
+`sweep.run_batch` / `run_grid` / `scenarios.run` route through `plan()` +
+`execute()`; see docs/ARCHITECTURE.md ("The execution layer").
+"""
+from .dispatch import execute, lane_sharding, last_plan  # noqa: F401
+from .planner import (DEFAULT_MEM_FRACTION, ENV_BUDGET, ExecPlan,  # noqa: F401
+                      auto_budget_bytes, device_free_bytes,
+                      host_available_bytes, plan)
+from .store import BENCH_FILENAME, RunStore  # noqa: F401

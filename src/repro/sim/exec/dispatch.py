@@ -1,0 +1,135 @@
+"""Multi-device dispatcher: stream an `ExecPlan`'s chunks through one
+compiled executable.
+
+Lanes of each chunk are sharded evenly across the plan's devices with a
+batch-axis `NamedSharding` — SPMD partitioning of the ONE cached vmapped
+program, not per-device jits, so the compile-count contract ("one XLA
+compilation per protocol variant", `engine.trace_count`) survives
+multi-device execution. Per-lane computation is independent (the vmap axis
+carries no collectives), so a sharded run is bit-identical to the serial
+single-device run.
+
+Chunks are double-buffered: chunk i+1 is dispatched (JAX dispatch is
+async) before chunk i is pulled back to host, so `jax.device_get` +
+phantom-lane trimming + optional `RunStore` spooling of chunk i overlap
+device compute of chunk i+1. `pipeline_depth` bounds how many chunks are
+in flight (depth 1 = fully synchronous, depth 2 = classic double buffer).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .. import engine
+from ..engine import SimState
+from .planner import ExecPlan
+
+# The most recent plan `execute` ran — introspection hook for examples,
+# benchmarks, and trace_guard (what did the planner decide?).
+LAST_PLAN: Optional[ExecPlan] = None
+
+
+def last_plan() -> Optional[ExecPlan]:
+    return LAST_PLAN
+
+
+def lane_sharding(devices: Sequence) -> NamedSharding:
+    """Batch-axis sharding: lane k of a chunk lands on device k * D // W."""
+    mesh = Mesh(np.asarray(devices), ("lanes",))
+    return NamedSharding(mesh, PartitionSpec("lanes"))
+
+
+def _shard_tree(tree, sharding: NamedSharding):
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sharding),
+                                  tree)
+
+
+def _land(st, emits, n_real: int) -> Tuple[SimState, np.ndarray]:
+    """Pull one chunk to host and drop its padded lanes (blocks until the
+    device is done with this chunk — later chunks keep computing)."""
+    st = jax.device_get(st)
+    st = SimState(**{name: np.asarray(leaf)[:n_real]
+                     for name, leaf in st._asdict().items()})
+    return st, np.asarray(emits)[:n_real]
+
+
+def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
+            store=None, tag: str = "run", collect: bool = True):
+    """Run K lanes (workload `flowsets[k]` on fabric `topos[k]`) under one
+    protocol config according to `plan`. Returns (batched SimState,
+    emits[K, T, 3]) bit-identical to an unchunked single-device
+    `sweep.run_batch`. With a `RunStore`, each chunk's trimmed results are
+    spooled to disk the moment it lands; `collect=False` (requires a
+    store) additionally drops each chunk from host memory once spooled and
+    returns None — the streaming mode for grids whose merged result would
+    not fit on host (reassemble lazily via `store.load_tag(tag)`)."""
+    global LAST_PLAN
+    LAST_PLAN = plan
+    if not collect and store is None:
+        raise ValueError("collect=False discards results: pass a store")
+    from .. import sweep  # deferred: sweep <-> exec call into each other
+
+    K = len(flowsets)
+    if len(topos) != K:
+        raise ValueError(f"{len(topos)} topologies for {K} flowsets")
+    if plan.n_lanes != K:
+        raise ValueError(f"plan covers {plan.n_lanes} lanes, got {K}")
+    W = plan.chunk_width
+    if plan.sharded and W % plan.n_devices:
+        raise ValueError(f"chunk width {W} not a multiple of "
+                         f"{plan.n_devices} devices")
+
+    go = engine.compiled_runner(plan.dims, engine.static_cfg(cfg),
+                                plan.f_max, plan.n_ticks, plan.unroll,
+                                batched=True)
+    sharding = lane_sharding(plan.devices) if plan.sharded else None
+
+    def dispatch(lo: int):
+        """Stack + (optionally) shard one chunk and launch it. Tail chunks
+        are padded with repeats of lane 0 so every chunk has width W and
+        reuses the one compiled program; padded results are dropped at
+        landing."""
+        fsets = list(flowsets[lo:lo + W])
+        tps = list(topos[lo:lo + W])
+        n_real = len(fsets)
+        fsets += [flowsets[0]] * (W - n_real)
+        tps += [topos[0]] * (W - n_real)
+        ops = sweep.stack_operands(fsets, cfg, plan.f_max)
+        t_ops = sweep.stack_topos(tps, cfg, plan.dims)
+        if sharding is not None:
+            ops = _shard_tree(ops, sharding)
+            t_ops = _shard_tree(t_ops, sharding)
+        st, emits = go(ops, t_ops)
+        return n_real, st, emits
+
+    chunks: List[Tuple[SimState, np.ndarray]] = []
+    inflight: deque = deque()
+
+    def land_oldest():
+        idx, (n_real, st, emits) = inflight.popleft()
+        landed = _land(st, emits, n_real)
+        if store is not None:
+            store.spool_chunk(tag, idx, *landed)
+        if collect:
+            chunks.append(landed)
+
+    for idx, lo in enumerate(range(0, K, W)):
+        inflight.append((idx, dispatch(lo)))
+        if len(inflight) >= max(1, plan.pipeline_depth):
+            land_oldest()
+    while inflight:
+        land_oldest()
+
+    if not collect:
+        return None
+    if len(chunks) == 1:
+        return chunks[0]
+    merged = SimState(**{
+        name: np.concatenate([np.asarray(getattr(st, name))
+                              for st, _ in chunks])
+        for name in SimState._fields})
+    return merged, np.concatenate([em for _, em in chunks])

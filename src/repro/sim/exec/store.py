@@ -1,0 +1,151 @@
+"""Run store: spool per-chunk sweep results to disk and record the
+benchmark trajectory (`BENCH_sweep.json`).
+
+Two jobs, one object:
+
+* **Chunk spooling** — `exec.dispatch.execute(..., store=...)` hands every
+  landed chunk (trimmed SimState + emits) to `spool_chunk`, which writes it
+  as one `.npz` under ``<root>/chunks/`` the moment it lands (pass
+  ``collect=False`` to `execute` for paper-scale grids where results should
+  live ONLY on disk). The manifest is persisted to ``<root>/manifest.json``
+  after every chunk, so a later — or crashed — process can reattach
+  (`RunStore(root)` reloads it) and `load_tag` / `load_chunk` reassemble
+  any run after the fact. The same tag may recur across `execute` calls
+  (one protocol in several groups or scenarios): each call opens a new
+  *run* of that tag, and `load_tag` returns one run — the latest by
+  default — never an interleaving of several.
+
+* **Benchmark records** — `record_scenario` accumulates one record per
+  scenario (wall time, grid points, lanes/sec, XLA compile count, device
+  count, planner provenance) and `write_bench` emits them as
+  ``BENCH_sweep.json``, the machine-readable perf trajectory the nightly
+  (`benchmarks/run.py --scenario all`) finally records.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..engine import SimState
+
+BENCH_FILENAME = "BENCH_sweep.json"
+_EMITS_KEY = "__emits__"
+
+
+class RunStore:
+    def __init__(self, root: Union[str, Path], run_id: Optional[str] = None):
+        self.root = Path(root)
+        self.run_id = run_id or time.strftime("%Y%m%d-%H%M%S")
+        self.chunk_dir = self.root / "chunks"
+        self.manifest_path = self.root / "manifest.json"
+        self.manifest: List[dict] = []
+        self.records: Dict[str, dict] = {}
+        if self.manifest_path.exists():  # reattach to a prior/crashed run
+            self.manifest = json.loads(self.manifest_path.read_text())
+
+    # ---- chunk spooling -----------------------------------------------------
+    def _run_of(self, tag: str, index: int) -> int:
+        """Run number of an incoming chunk: chunk 0 opens a new run of its
+        tag (each `execute` call spools its chunks in order from 0)."""
+        prior = [e["run"] for e in self.manifest if e["tag"] == tag]
+        last = max(prior, default=-1)
+        return last + 1 if index == 0 else last
+
+    def spool_chunk(self, tag: str, index: int, state: SimState,
+                    emits: np.ndarray) -> Path:
+        """Write one landed chunk to disk and persist the manifest.
+        Filenames carry a global sequence number and runs of a repeated tag
+        (same protocol in different groups/scenarios) are numbered, so
+        nothing ever collides or interleaves."""
+        self.chunk_dir.mkdir(parents=True, exist_ok=True)
+        run = self._run_of(tag, index)
+        path = (self.chunk_dir /
+                f"{len(self.manifest):04d}_{tag}_r{run}_c{index}.npz")
+        np.savez(path, **{_EMITS_KEY: np.asarray(emits)},
+                 **{k: np.asarray(v) for k, v in state._asdict().items()})
+        self.manifest.append({
+            "tag": tag, "run": run, "chunk": index, "path": str(path),
+            "lanes": int(np.asarray(emits).shape[0])})
+        self.manifest_path.write_text(json.dumps(self.manifest, indent=1)
+                                      + "\n")
+        return path
+
+    @staticmethod
+    def load_chunk(path: Union[str, Path]) -> Tuple[SimState, np.ndarray]:
+        with np.load(path) as z:
+            return (SimState(**{k: z[k] for k in SimState._fields}),
+                    z[_EMITS_KEY])
+
+    def runs_of(self, tag: str) -> List[int]:
+        return sorted({e["run"] for e in self.manifest if e["tag"] == tag})
+
+    def load_tag(self, tag: str,
+                 run: Optional[int] = None) -> Tuple[SimState, np.ndarray]:
+        """Reassemble ONE spooled run of a tag (default: the latest), in
+        chunk order, into the merged (SimState, emits) `execute` returned.
+        Runs never interleave; pick an earlier one via `run` / `runs_of`."""
+        runs = self.runs_of(tag)
+        if not runs:
+            raise KeyError(f"no spooled chunks tagged {tag!r}")
+        run = runs[-1] if run is None else run
+        entries = sorted((e for e in self.manifest
+                          if e["tag"] == tag and e["run"] == run),
+                         key=lambda e: e["chunk"])
+        if not entries:
+            raise KeyError(f"tag {tag!r} has runs {runs}, not {run}")
+        parts = [self.load_chunk(e["path"]) for e in entries]
+        merged = SimState(**{
+            name: np.concatenate([np.asarray(getattr(st, name))
+                                  for st, _ in parts])
+            for name in SimState._fields})
+        return merged, np.concatenate([em for _, em in parts])
+
+    # ---- benchmark trajectory -----------------------------------------------
+    def record_scenario(self, name: str, *, wall_s: float, grid_points: int,
+                        xla_compilations: int, device_count: int,
+                        **extra) -> dict:
+        rec = {
+            "wall_s": round(float(wall_s), 3),
+            "grid_points": int(grid_points),
+            "lanes_per_sec": round(grid_points / wall_s, 3)
+            if wall_s > 0 else None,
+            "xla_compilations": int(xla_compilations),
+            "device_count": int(device_count),
+        }
+        rec.update(extra)
+        self.records[name] = rec
+        return rec
+
+    def summary_table(self) -> str:
+        """One line per recorded scenario, aligned for terminal output."""
+        hdr = (f"{'scenario':<28} {'points':>6} {'compiles':>8} "
+               f"{'wall_s':>8} {'lanes/s':>8} {'devices':>7}")
+        lines = [hdr]
+        for name in sorted(self.records):
+            r = self.records[name]
+            lps = r["lanes_per_sec"]
+            lines.append(
+                f"{name:<28} {r['grid_points']:>6} "
+                f"{r['xla_compilations']:>8} {r['wall_s']:>8.1f} "
+                f"{(f'{lps:.2f}' if lps is not None else '-'):>8} "
+                f"{r['device_count']:>7}")
+        return "\n".join(lines)
+
+    def write_bench(self, path: Union[str, Path, None] = None,
+                    **meta) -> Path:
+        path = Path(path) if path is not None else self.root / BENCH_FILENAME
+        payload = {
+            "run_id": self.run_id,
+            "created_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "chunks_spooled": len(self.manifest),
+            **meta,
+            "scenarios": self.records,
+        }
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=2, sort_keys=False)
+                        + "\n")
+        return path

@@ -159,13 +159,18 @@ def names() -> List[str]:
 
 def run(name_or_scenario, clos: Optional[ClosParams] = None,
         n_flows: Optional[int] = None, drain: Optional[int] = None,
-        unroll: int = 1, max_batch_bytes: Optional[int] = None):
+        unroll: int = 1, max_batch_bytes: Optional[int] = None,
+        devices: Optional[Sequence] = None, auto_budget: bool = True,
+        store=None):
     """Run one registry scenario through the batched sweep subsystem.
 
     `clos` sets the fabric for scenarios without their own `topologies`
-    axis (scenarios WITH one pin their fabrics absolutely). Returns a list
-    of sweep.CaseResult (one per grid point), each carrying per-config
-    SimState, emits, and summarized RunMetrics."""
+    axis (scenarios WITH one pin their fabrics absolutely). Execution
+    placement — chunk width, multi-device sharding, chunk spooling — is
+    planned per protocol group by `sim.exec` (`devices`, `auto_budget`,
+    `max_batch_bytes`, `store` pass through to its planner/dispatcher).
+    Returns a list of sweep.CaseResult (one per grid point), each carrying
+    per-config SimState, emits, and summarized RunMetrics."""
     from . import sweep
     sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
           else get(name_or_scenario))
@@ -174,7 +179,9 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
     return sweep.run_grid(topo, cases,
                           drain=(drain if drain is not None
                                  else sc.drain_ticks),
-                          unroll=unroll, max_batch_bytes=max_batch_bytes)
+                          unroll=unroll, max_batch_bytes=max_batch_bytes,
+                          devices=devices, auto_budget=auto_budget,
+                          store=store)
 
 
 # ---- the paper's grid --------------------------------------------------------

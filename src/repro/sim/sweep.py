@@ -43,14 +43,17 @@ protocol variants. `engine.trace_count()` counts actual XLA traces, which
 tests and scripts/trace_guard.py use to assert the one-compilation
 property.
 
-Memory budget
--------------
-``run_batch(..., max_batch_bytes=...)`` estimates the per-lane SimState
-footprint (dominated by the F x H rings and the P x Q x CAP queue buffers)
-via ``lane_state_bytes`` and splits grids that would exceed the budget into
-equal-width chunks (the tail chunk padded with repeats of lane 0, results
-dropped) so every chunk reuses ONE compiled program instead of OOMing the
-device.
+Execution
+---------
+*Where* a grid runs — chunk width, device placement, host/device overlap —
+is owned by `repro.sim.exec`. ``run_batch`` derives (or accepts) an
+``exec.ExecPlan``: the planner measures the per-lane SimState footprint via
+``lane_state_bytes`` (dominated by the F x H rings and the P x Q x CAP
+queue buffers), reads live device stats to auto-derive the chunk width
+(``max_batch_bytes`` remains as an explicit override), and the dispatcher
+shards each chunk's lanes across every local device while double-buffering
+host readback — all chunks still reuse the ONE compiled program (the tail
+chunk is padded with repeats of lane 0, padded results dropped).
 """
 from __future__ import annotations
 
@@ -214,57 +217,37 @@ def select_config(batched_state: SimState, k: int,
 def run_batch(topo: Union[Topology, Sequence[Topology]],
               flowsets: Sequence[FlowSet], cfg: SimConfig, n_ticks: int,
               unroll: int = 1, pad_multiple: int = PAD_MULTIPLE,
-              max_batch_bytes: Optional[int] = None):
+              max_batch_bytes: Optional[int] = None,
+              devices: Optional[Sequence] = None, auto_budget: bool = True,
+              plan: Optional["object"] = None, store=None):
     """Run K workloads under one protocol config as a single vmapped,
     jitted program. `topo` is one Topology shared by every lane or a
     per-lane sequence (mixed fabrics are padded to a common `TopoDims`, so
     topology rides the batch axis of the SAME compilation). Returns
     (batched_state, emits[K, T, 3]); use `select_config` to view one lane.
 
-    `max_batch_bytes` caps the device-resident SimState footprint: grids
-    whose K x `lane_state_bytes` exceed it run as equal-width chunks of one
-    shared executable (tail chunk padded by repeating lane 0)."""
+    Execution routes through an `exec.ExecPlan` (pass one via `plan` to
+    override placement entirely): the planner caps the device-resident
+    SimState footprint at `max_batch_bytes` when given, else auto-derives a
+    budget from live device/host memory stats (`auto_budget=False` forgoes
+    the cap). Oversized grids run as equal-width chunks of one shared
+    executable, each chunk sharded across `devices` (default: all local
+    devices) and double-buffered against host readback; a `store`
+    (`exec.RunStore`) spools chunks to disk as they land."""
+    from . import exec as exec_
     K = len(flowsets)
     topos = _topo_list(topo, K)
     dims = batch_dims(topos)
     f_max = padded_count(flowsets, pad_multiple)
     n_ticks = int(np.ceil(n_ticks / unroll) * unroll)
 
-    width = K
-    if max_batch_bytes is not None:
-        per_lane = lane_state_bytes(dims, cfg, f_max, n_ticks)
-        width = int(max(1, min(K, max_batch_bytes // max(per_lane, 1))))
-
-    go = engine.compiled_runner(dims, engine.static_cfg(cfg), f_max,
-                                n_ticks, unroll, batched=True)
-
-    def run_lanes(fsets, tps):
-        return go(stack_operands(fsets, cfg, f_max),
-                  stack_topos(tps, cfg, dims))
-
-    if width >= K:
-        st, emits = run_lanes(flowsets, topos)
-        return jax.device_get(st), np.asarray(emits)
-
-    # chunked execution: every chunk has `width` lanes (tail padded with
-    # repeats of lane 0, padded results dropped) so ALL chunks share the
-    # one compiled program; chunks run serially to respect the budget.
-    states, emits_all = [], []
-    for lo in range(0, K, width):
-        fsets = list(flowsets[lo:lo + width])
-        tps = topos[lo:lo + width]
-        n_real = len(fsets)
-        fsets += [flowsets[0]] * (width - n_real)
-        tps = tps + [topos[0]] * (width - n_real)
-        st, emits = run_lanes(fsets, tps)
-        st = jax.device_get(st)
-        states.append(SimState(**{n: np.asarray(v)[:n_real]
-                                  for n, v in st._asdict().items()}))
-        emits_all.append(np.asarray(emits)[:n_real])
-    merged = SimState(**{
-        name: np.concatenate([np.asarray(getattr(s, name)) for s in states])
-        for name in SimState._fields})
-    return merged, np.concatenate(emits_all)
+    if plan is None:
+        budget = (max_batch_bytes if max_batch_bytes is not None
+                  else ("auto" if auto_budget else None))
+        plan = exec_.plan(dims, cfg, f_max, n_ticks, K, devices=devices,
+                          budget=budget, unroll=unroll)
+    return exec_.execute(plan, topos, flowsets, cfg, store=store,
+                         tag=cfg.proto.name)
 
 
 @dataclass
@@ -293,7 +276,9 @@ def run_grid(topo: Topology,
              n_ticks: Optional[int] = None, drain: int = 20_000,
              unroll: int = 1, pad_multiple: int = PAD_MULTIPLE,
              summarize: bool = True,
-             max_batch_bytes: Optional[int] = None) -> List[CaseResult]:
+             max_batch_bytes: Optional[int] = None,
+             devices: Optional[Sequence] = None, auto_budget: bool = True,
+             store=None) -> List[CaseResult]:
     """Run an arbitrary (label, SimConfig, FlowSet) grid.
 
     Each case runs on the fabric named by its own ``cfg.clos`` (``topo`` is
@@ -304,7 +289,8 @@ def run_grid(topo: Topology,
     their Python-level branches produce different programs by
     construction). All groups share `n_ticks` (default: max horizon +
     drain) so same-shaped protocol groups can still share executables
-    across calls."""
+    across calls. `devices` / `auto_budget` / `max_batch_bytes` / `store`
+    configure each group's `exec.ExecPlan` (see `run_batch`)."""
     if n_ticks is None:
         n_ticks = int(max(f.horizon for _, _, f in cases) + drain)
     # group key: the compile signature — protocol/timing config plus the
@@ -321,7 +307,9 @@ def run_grid(topo: Topology,
         group_topos = [topos[i] for i in idxs]
         cfg = cases[idxs[0]][1]
         st, emits = run_batch(group_topos, flowsets, cfg, n_ticks, unroll,
-                              pad_multiple, max_batch_bytes=max_batch_bytes)
+                              pad_multiple, max_batch_bytes=max_batch_bytes,
+                              devices=devices, auto_budget=auto_budget,
+                              store=store)
         for k, i in enumerate(idxs):
             label, case_cfg, flows = cases[i]
             case_topo = group_topos[k]

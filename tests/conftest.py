@@ -2,7 +2,9 @@ import os
 import sys
 
 # Tests must see the real single CPU device (the 512-device override is only
-# ever set inside launch/dryrun.py). Keep jax quiet and deterministic.
+# ever set inside launch/dryrun.py). Keep jax quiet and deterministic. An
+# ambient exec budget would change auto-planned chunking under the tests.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.pop("REPRO_EXEC_MAX_BYTES", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

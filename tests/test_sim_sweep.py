@@ -99,3 +99,77 @@ def test_padded_count_rounds_up(tiny_topo):
     flowsets = _fb_grid(tiny_topo, loads=(0.5,), seeds=(1,), n_flows=70)
     assert sweep.padded_count(flowsets, pad_multiple=64) == 128
     assert sweep.padded_count(flowsets, pad_multiple=1) == 70
+
+
+# ---- trim_state / select_config at chunk boundaries -------------------------
+# A budget-chunked run stitches (width)-lane chunks back into one batched
+# SimState; lanes adjacent to a seam, the lone lane of a K=1 batch, and
+# lanes of the lane-0-padded tail chunk must all trim/select identically to
+# an unchunked or serial run.
+
+def _serial_ref(topo, flows, cfg, n_ticks):
+    st, em = engine.run(topo, flows, cfg, n_ticks)
+    return sweep.trim_state(st, flows.n_flows), em
+
+
+def _assert_lane_matches(st_b, em_b, k, topo, flows, cfg, n_ticks, label):
+    st_ref, em_ref = _serial_ref(topo, flows, cfg, n_ticks)
+    st_k = sweep.select_config(st_b, k, flows.n_flows)
+    assert np.array_equal(em_b[k], em_ref), f"{label}: lane {k} emits"
+    for name in st_ref._fields:
+        assert np.array_equal(np.asarray(getattr(st_k, name)),
+                              np.asarray(getattr(st_ref, name))), \
+            f"{label}: lane {k} SimState.{name}"
+
+
+def test_single_lane_batch_matches_serial(tiny_topo):
+    """K=1: the degenerate batch (one lane, one chunk, no tail padding)
+    still trims back to the serial run bit-for-bit."""
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    [flows] = _fb_grid(tiny_topo, loads=(0.5,), seeds=(9,), n_flows=30)
+    n_ticks = int(flows.horizon + 800)
+    st_b, em_b = sweep.run_batch(tiny_topo, [flows], cfg, n_ticks)
+    assert em_b.shape[0] == 1
+    _assert_lane_matches(st_b, em_b, 0, tiny_topo, flows, cfg, n_ticks,
+                         "single-lane")
+
+
+def test_select_config_on_chunk_seams_and_padded_tail(tiny_topo):
+    """K=5 split into width-2 chunks: chunk boundaries fall after lanes 1
+    and 3, and the tail chunk holds one real lane + one lane-0 repeat.
+    Lanes on either side of a seam (1, 2) and the tail lane (4) must
+    select/trim identically to their serial runs; the lane-0 pad must be
+    dropped from the merged batch entirely."""
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    flowsets = _fb_grid(tiny_topo, loads=(0.5,), seeds=(1, 2, 3, 4, 5),
+                        n_flows=24)
+    n_ticks = int(max(f.horizon for f in flowsets) + 800)
+    per = sweep.lane_state_bytes(topology.TopoDims.of(tiny_topo), cfg,
+                                 sweep.padded_count(flowsets), n_ticks)
+    st_b, em_b = sweep.run_batch(tiny_topo, flowsets, cfg, n_ticks,
+                                 max_batch_bytes=4 * per)  # /depth 2 -> w=2
+    # padded tail lane was dropped: exactly K lanes in the merged result
+    assert em_b.shape[0] == 5
+    assert np.asarray(st_b.done).shape[0] == 5
+    for k in (1, 2, 4):
+        _assert_lane_matches(st_b, em_b, k, tiny_topo, flowsets[k], cfg,
+                             n_ticks, "seam/tail")
+
+
+def test_tail_pad_is_lane0_repeat_before_trim(tiny_topo):
+    """The tail chunk's pad lanes are repeats of lane 0 by contract; the
+    merged result must NOT contain them, and lane 0 itself must be the
+    chunk-0 copy (first occurrence), not the tail repeat."""
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    flowsets = _fb_grid(tiny_topo, loads=(0.5,), seeds=(1, 2, 3),
+                        n_flows=24)
+    n_ticks = int(max(f.horizon for f in flowsets) + 800)
+    per = sweep.lane_state_bytes(topology.TopoDims.of(tiny_topo), cfg,
+                                 sweep.padded_count(flowsets), n_ticks)
+    st_b, em_b = sweep.run_batch(tiny_topo, flowsets, cfg, n_ticks,
+                                 max_batch_bytes=4 * per)  # chunks: 2, 1+1pad
+    assert em_b.shape[0] == 3
+    # the pad lane reran lane 0's workload, so lane 0 selected from the
+    # merged batch equals the serial lane-0 run (pad did not leak in)
+    _assert_lane_matches(st_b, em_b, 0, tiny_topo, flowsets[0], cfg,
+                         n_ticks, "lane0-vs-pad")
