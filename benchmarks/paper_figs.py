@@ -22,19 +22,28 @@ from dataclasses import replace
 def fig3_4_buffer_occupancy_vs_speed():
     """Figs. 3-4: e2e CC loses buffer control as link speed rises. Tick time
     is relative to link speed, so 'faster links' = same load with BDP scaled
-    up: we scale prop/hrtt ticks (12->48) emulating 25->100 Gbps."""
-    for speed, prop in (("25g", 3), ("50g", 6), ("100g", 12)):
-        clos = ClosParams(n_servers=CLOS.n_servers, n_tor=CLOS.n_tor,
-                          n_spine=CLOS.n_spine, prop_ticks=prop,
-                          switch_buffer_pkts=CLOS.switch_buffer_pkts)
-        topo, flows = make_flows(load=0.6, clos=clos, seed=3)
-        for proto in ("dcqcn", "hpcc"):
-            m, st, emits, _ = run_proto(proto, flows, topo, clos=clos)
-            emit(f"fig3_{proto}_{speed}", "buffer_p99_rel",
-                 round(m.buffer_p99_pkts / clos.switch_buffer_pkts, 4))
-            emit(f"fig4_{proto}_{speed}", "p99_slowdown_1pkt",
-                 round(m.by_size.get("(0,1]KB", {}).get("p99",
-                                                        float("nan")), 2))
+    up: we scale prop ticks (3->12) emulating 25->100 Gbps. Link delay is a
+    traced operand, so all three speeds of a protocol ride the batch axis
+    of ONE compiled program instead of recompiling per prop."""
+    speed_of = {3: "25g", 6: "50g", 12: "100g"}
+    sc = scenarios.Scenario(
+        name="fig3_speed",
+        description="buffer occupancy vs emulated link speed",
+        workload="fb_hadoop", protos=("dcqcn", "hpcc"),
+        loads=(0.6,), seeds=(3,),
+        topologies=tuple(
+            ClosParams(n_servers=CLOS.n_servers, n_tor=CLOS.n_tor,
+                       n_spine=CLOS.n_spine, prop_ticks=prop,
+                       switch_buffer_pkts=CLOS.switch_buffer_pkts)
+            for prop in speed_of))
+    for r in run_scenario(sc):
+        m, clos = r.metrics, r.cfg.clos
+        speed = speed_of[clos.prop_ticks]
+        emit(f"fig3_{r.proto}_{speed}", "buffer_p99_rel",
+             round(m.buffer_p99_pkts / clos.switch_buffer_pkts, 4))
+        emit(f"fig4_{r.proto}_{speed}", "p99_slowdown_1pkt",
+             round(m.by_size.get("(0,1]KB", {}).get("p99",
+                                                    float("nan")), 2))
     emit("fig3", "claim",
          "relative buffer occupancy grows with link speed for e2e CC")
 

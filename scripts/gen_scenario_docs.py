@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Generate docs/SCENARIOS.md from the experiment registry.
+
+The registry (`repro.sim.scenarios.SCENARIOS`) is the single source of
+truth for every named experiment grid; this script renders it as a
+reference table — name, the paper figure/table it reproduces (or
+"beyond-paper"), workload, sweep axes, and grid size (= batch lanes) —
+so the docs can never silently diverge from the code:
+
+    python scripts/gen_scenario_docs.py            # (re)write the doc
+    python scripts/gen_scenario_docs.py --check    # CI: fail if stale
+
+`scripts/ci.sh` runs the --check form on every tier-1 invocation.
+Axis cardinalities come from `Scenario.axes()` / `grid_size()`, which are
+pure arithmetic over the declaration — no workloads are generated, so the
+check is instant.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DOC_PATH = os.path.join(os.path.dirname(__file__), "..", "docs",
+                        "SCENARIOS.md")
+
+HEADER = """# Scenario registry reference
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with: python scripts/gen_scenario_docs.py
+     (scripts/ci.sh runs the --check form on every tier-1 run) -->
+
+Every named experiment grid in `src/repro/sim/scenarios.py`, the
+declarative registry the batched sweep subsystem executes with one XLA
+compilation per protocol variant (topologies, link latencies, loads,
+incast degrees, and seeds all ride the vmap batch axis). Run one with:
+
+```bash
+PYTHONPATH=src python -m benchmarks.run --scenario NAME    # or 'all'
+```
+
+or from Python: `repro.sim.scenarios.run(NAME)`. *Grid* is the number of
+batch lanes the scenario expands to (protocols x loads x seeds x degrees
+x topologies); *reproduces* names the paper figure/table a grid mirrors,
+or `beyond-paper` for scenarios that extend the evaluation.
+"""
+
+
+def _axes_cell(sc) -> str:
+    parts = [f"{v} {k}" for k, v in sc.axes().items() if v > 1]
+    return " x ".join(parts) if parts else "single point"
+
+
+def _extras_cell(sc) -> str:
+    extras = []
+    if sc.incast_load > 0:
+        extras.append(f"{int(sc.incast_load * 100)}% incast")
+    if sc.incast_degrees:
+        extras.append(f"degree {min(sc.incast_degrees)}-"
+                      f"{max(sc.incast_degrees)}")
+    if sc.topologies:
+        props = {c.prop_ticks for c in sc.topologies}
+        spines = {c.n_spine for c in sc.topologies}
+        bufs = {c.switch_buffer_pkts for c in sc.topologies}
+        if len(props) > 1:
+            extras.append(f"prop {min(props)}-{max(props)} ticks")
+        if len(spines) > 1:
+            extras.append(f"spines {min(spines)}-{max(spines)}")
+        if len(bufs) > 1:
+            extras.append(f"buffers {min(bufs)}-{max(bufs)} pkts")
+    if sc.locality > 0:
+        extras.append(f"{int(sc.locality * 100)}% rack-local")
+    if sc.long_lived:
+        extras.append(f"{sc.long_lived} long-lived")
+    return ", ".join(extras) if extras else "—"
+
+
+def render() -> str:
+    from repro.sim import scenarios
+
+    rows = ["| scenario | reproduces | workload | axes | notable knobs | "
+            "grid |",
+            "|---|---|---|---|---|---|"]
+    for name in scenarios.names():
+        sc = scenarios.get(name)
+        rows.append(
+            f"| `{name}` | {sc.paper_ref or 'beyond-paper'} "
+            f"| {sc.workload} | {_axes_cell(sc)} | {_extras_cell(sc)} "
+            f"| {sc.grid_size()} |")
+    total = sum(scenarios.get(n).grid_size() for n in scenarios.names())
+    protos = {p for n in scenarios.names()
+              for p in scenarios.get(n).protos}
+    footer = (f"\n{len(scenarios.names())} scenarios, {total} grid points "
+              f"total, {len(protos)} protocol variants "
+              f"({', '.join(sorted(protos))}).\n\n"
+              "Scenario descriptions live in the registry docstrings; "
+              "architecture background (operand batching, the padding "
+              "contracts, the execution planner) in "
+              "[ARCHITECTURE.md](ARCHITECTURE.md).\n")
+    return HEADER + "\n" + "\n".join(rows) + "\n" + footer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if docs/SCENARIOS.md is stale instead "
+                         "of rewriting it")
+    ap.add_argument("--out", default=DOC_PATH)
+    args = ap.parse_args()
+
+    want = render()
+    if args.check:
+        have = (open(args.out).read() if os.path.exists(args.out) else "")
+        if have != want:
+            print("docs/SCENARIOS.md is stale: the scenario registry "
+                  "changed without regenerating it.\nRun: python "
+                  "scripts/gen_scenario_docs.py", file=sys.stderr)
+            sys.exit(1)
+        print(f"scenario docs ok: {args.out} matches the registry")
+        return
+    with open(args.out, "w") as f:
+        f.write(want)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,24 @@
 #!/usr/bin/env python
-"""Tier-1 compile-count guard: a 2-topology x 2-seed mini-grid through the
-batched sweep subsystem must trigger exactly ONE XLA trace — including on
-the multi-device sharded path.
+"""Tier-1 compile-count guard: a 2-topology x 2-seed mini-grid — the two
+fabrics ALSO differing in link delay (`prop_ticks` 6 vs 12) — through the
+batched sweep subsystem must trigger exactly ONE XLA trace, including on
+the multi-device sharded path, and stay bit-identical to serial
+per-latency runs.
 
-Topology is a traced operand (`TopoOperands`) of one compiled simulator, so
-compilation cost scales with the number of protocol variants only — never
-with topologies, seeds, or loads. The execution planner (`sim/exec`) must
-preserve that: sharding a chunk's lanes across devices is SPMD partitioning
-of the ONE cached executable (never per-device jits), and every chunk of a
-budget-split grid reuses it. This script forces 4 simulated host devices,
-runs the grid once through the default auto plan (sharded when multi-device)
-and once through a deliberately chunked 2-device plan, and asserts one
-trace total plus bit-identical results. It is the cheap canary
-scripts/ci.sh runs on every tier-1 invocation; the full bit-identity
-matrix lives in tests/test_sim_topo_sweep.py and tests/test_sim_exec.py."""
+Topology is a traced operand (`TopoOperands`) of one compiled simulator —
+including the link propagation delay, which wraps the padded wire rings at
+a traced per-lane modulus — so compilation cost scales with the number of
+protocol variants only: never with topologies, latencies, seeds, or loads.
+The execution planner (`sim/exec`) must preserve that: sharding a chunk's
+lanes across devices is SPMD partitioning of the ONE cached executable
+(never per-device jits), and every chunk of a budget-split grid reuses it.
+This script forces 4 simulated host devices, runs the grid once through
+the default auto plan (sharded when multi-device) and once through a
+deliberately chunked 2-device plan, asserts one trace total, and checks
+every grid point bit-for-bit against its own serial `engine.run` (each
+latency compiled alone). It is the cheap canary scripts/ci.sh runs on
+every tier-1 invocation; the full bit-identity matrix lives in
+tests/test_sim_topo_sweep.py and tests/test_sim_exec.py."""
 import os
 import sys
 
@@ -39,9 +44,9 @@ def main() -> None:
     import jax
     n_dev = len(jax.devices())
 
-    fabrics = (ClosParams(n_servers=8, n_tor=2, n_spine=2,
+    fabrics = (ClosParams(n_servers=8, n_tor=2, n_spine=2, prop_ticks=6,
                           switch_buffer_pkts=512),
-               ClosParams(n_servers=12, n_tor=2, n_spine=3,
+               ClosParams(n_servers=12, n_tor=2, n_spine=3, prop_ticks=12,
                           switch_buffer_pkts=1024))
     seeds = (1, 2)
     cases = []
@@ -66,11 +71,34 @@ def main() -> None:
         assert plan.sharded and plan.chunk_width % plan.n_devices == 0, \
             plan.describe()
     if traces != 1:
-        print(f"TRACE GUARD FAILED: {len(cases)}-case 2-topology grid on "
-              f"{plan.n_devices} device(s) compiled {traces}x (expected "
-              "exactly 1). A compile-cache key, operand, or the sharded "
-              "dispatch path regressed into per-device programs.")
+        print(f"TRACE GUARD FAILED: {len(cases)}-case 2-topology "
+              f"2-latency grid on {plan.n_devices} device(s) compiled "
+              f"{traces}x (expected exactly 1). A compile-cache key, "
+              "operand (incl. the traced prop_ticks modulus), or the "
+              "sharded dispatch path regressed into per-device programs.")
         sys.exit(1)
+
+    # 1b) every lane bit-identical to its serial per-latency run (each
+    # fabric's own TopoDims, its own compilation — the reference the
+    # mixed-latency batch must reproduce exactly)
+    from repro.sim.topology import TopoDims
+    for (label, cfg, flows), r in zip(cases, results):
+        t = topology.build_cached(cfg.clos)
+        st_s, em_s = engine.run(t, flows, cfg, 512)
+        if not np.array_equal(r.emits, em_s):
+            print(f"TRACE GUARD FAILED: {label} (prop_ticks="
+                  f"{cfg.clos.prop_ticks}) diverges from its serial "
+                  "per-latency run — the traced wire-ring modulus or "
+                  "feedback-delay derivation is wrong.")
+            sys.exit(1)
+        st_s = sweep.trim_state(st_s, flows.n_flows, TopoDims.of(t))
+        bad = [n for n in st_s._fields
+               if not np.array_equal(np.asarray(getattr(r.state, n)),
+                                     np.asarray(getattr(st_s, n)))]
+        if bad:
+            print(f"TRACE GUARD FAILED: {label} state leaves {bad} "
+                  "diverge from the serial per-latency run.")
+            sys.exit(1)
 
     # 2) forced chunked + sharded plan (2 chunks x 2 lanes, each sharded
     # over 2 devices): every chunk must reuse the same executable and
@@ -101,7 +129,8 @@ def main() -> None:
             f"{r.label}: chunked/sharded emits diverge from auto plan"
 
     print(f"trace guard ok: {len(cases)} grid points "
-          f"(2 topologies x 2 seeds) on {plan.n_devices} device(s), "
+          f"(2 topologies x 2 link latencies x 2 seeds, bit-identical to "
+          f"serial) on {plan.n_devices} device(s), "
           f"{traces} XLA trace; chunked plan "
           f"({ch_plan.n_chunks} x {ch_plan.chunk_width} lanes on "
           f"{ch_plan.n_devices} dev) added {ch_traces} trace(s)")

@@ -12,8 +12,10 @@ See docs/ARCHITECTURE.md for the full design: the phase pipeline, the two
 traced operand bundles (`FlowOperands` here, `topology.TopoOperands`), and
 both padding contracts (phantom flows, phantom ports/switches/servers) that
 let `sim/sweep.py` vmap a whole topology x workload x seed grid through one
-compiled program. Only `TopoDims` (port/server/switch counts, wire length)
-and the protocol/timing configuration remain compile-time constants.
+compiled program. Only `TopoDims` (port/server/switch counts, padded
+wire-ring length `prop_max`) and the protocol/timing configuration remain
+compile-time constants; the link propagation delay itself is the traced
+`TopoOperands.prop_ticks` modulus, so mixed-latency grids share a program.
 """
 from __future__ import annotations
 
@@ -53,17 +55,21 @@ class FlowOperands(NamedTuple):
     fid: jnp.ndarray         # (F,) 32-bit flow id
     fpos: jnp.ndarray        # (F, S) Bloom-filter bit positions
     fbucket: jnp.ndarray     # (F,) flow-table bucket
-    fb_delay: jnp.ndarray    # (F,) one-way feedback delay in ticks
+    hops: jnp.ndarray        # (F,) route hop count (transmissions per pkt)
 
 
 def pack_flows(flows, cfg: SimConfig) -> FlowOperands:
-    """Derive the traced operand bundle for a FlowSet under `cfg`."""
+    """Derive the traced operand bundle for a FlowSet under `cfg`.
+
+    Deliberately independent of `cfg.clos`: the one-way feedback delay is
+    derived in-trace as `hops * TopoOperands.prop_ticks + 1`, so one packed
+    bundle is correct on any fabric — including mixed-latency batches where
+    each lane carries its own traced propagation delay."""
     bparams = bloom.BloomParams(cfg.bloom_stages, cfg.bloom_stage_bits)
     ftp = FlowTableParams(cfg.ft_buckets, cfg.ft_bucket_size)
     routes = np.asarray(flows.routes, np.int32)
     fid = jnp.asarray(np.asarray(flows.fid, np.int32))
-    hops = (routes >= 0).sum(1)
-    fb_delay = (hops * cfg.clos.prop_ticks + 1).astype(np.int32)
+    hops = (routes >= 0).sum(1).astype(np.int32)
     return FlowOperands(
         routes=jnp.asarray(routes),
         src=jnp.asarray(np.asarray(flows.src, np.int32)),
@@ -73,7 +79,7 @@ def pack_flows(flows, cfg: SimConfig) -> FlowOperands:
         fid=fid,
         fpos=bloom.positions(fid, bparams),
         fbucket=buckets_of(fid, ftp),
-        fb_delay=jnp.asarray(fb_delay))
+        hops=jnp.asarray(hops))
 
 
 class SimState(NamedTuple):
@@ -117,9 +123,9 @@ class SimState(NamedTuple):
     # PFC
     ing_occ: jnp.ndarray       # (P,) pkts at downstream that arrived via port
     pfc_paused: jnp.ndarray    # (P,) bool
-    # links
-    wire_f: jnp.ndarray        # (P, PROP) packed entries in flight
-    wire_hop: jnp.ndarray      # (P, PROP)
+    # links (rings wrap at the lane's traced prop_ticks <= PROP_MAX)
+    wire_f: jnp.ndarray        # (P, PROP_MAX) packed entries in flight
+    wire_hop: jnp.ndarray      # (P, PROP_MAX)
     tx_ewma: jnp.ndarray       # (P,) f32 utilization estimate
     # feedback rings
     ack_ring: jnp.ndarray      # (RING, F) i32
@@ -152,7 +158,7 @@ def make_step(dims: TopoDims, cfg: SimConfig, n_flows: int):
     `cfg.clos` is deliberately unused here — strip it from cache keys."""
     pc, tm = cfg.proto, cfg.timing
     env = phases.make_env(dims, cfg, n_flows)
-    P, NSRV, NSW, PROP = env.P, env.NSRV, env.NSW, env.PROP
+    P, NSRV, NSW, PROP = env.P, env.NSRV, env.NSW, env.PROP_MAX
     Q, CAP, PLCAP, S = env.Q, env.CAP, env.PLCAP, env.S
     F, H, RING, RRING = env.F, env.H, env.RING, env.RRING
 

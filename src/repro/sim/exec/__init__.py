@@ -5,9 +5,12 @@ one compilation per protocol variant); this package decides *where and how
 fast* it runs:
 
 * `planner`  — reads live device stats (`jax.devices()`, `memory_stats()`,
-  host MemAvailable) and the measured per-lane SimState footprint to derive
-  an `ExecPlan`: chunk width, device set, pipeline depth. No more
-  caller-guessed `max_batch_bytes`.
+  host MemAvailable) and the measured per-lane SimState footprint —
+  including the `prop_max`-padded wire/feedback rings of mixed-latency
+  batches — to derive an `ExecPlan`: chunk width, device set, pipeline
+  depth (= chunks kept device-resident in flight). No more caller-guessed
+  `max_batch_bytes`; see `planner`'s docstring for the budget derivation
+  order.
 * `dispatch` — executes a plan: each chunk's lanes shard evenly across the
   devices via a batch-axis `NamedSharding` of the ONE cached executable,
   and chunks double-buffer so host readback overlaps device compute.

@@ -12,8 +12,12 @@ single-device run.
 Chunks are double-buffered: chunk i+1 is dispatched (JAX dispatch is
 async) before chunk i is pulled back to host, so `jax.device_get` +
 phantom-lane trimming + optional `RunStore` spooling of chunk i overlap
-device compute of chunk i+1. `pipeline_depth` bounds how many chunks are
-in flight (depth 1 = fully synchronous, depth 2 = classic double buffer).
+device compute of chunk i+1. `plan.pipeline_depth` bounds how many chunks
+are in flight — and therefore device-resident — at once (depth 1 = fully
+synchronous, depth 2 = classic double buffer; the planner already divided
+the byte budget by this depth, see `exec.planner`). Tail chunks are
+padded with repeats of lane 0 so every dispatch reuses the one compiled
+program; padded lanes are dropped at landing.
 """
 from __future__ import annotations
 

@@ -3,22 +3,38 @@
 The planner answers one question: given a grid of K batch lanes whose
 per-lane device footprint is `sweep.lane_state_bytes`, how wide should each
 dispatch be and on which devices should it land? Callers no longer guess a
-`max_batch_bytes` — `plan()` reads live device stats and derives the chunk
-width itself:
+`max_batch_bytes` — `plan()` derives the chunk width itself.
 
-1. an explicit integer budget (the old ``max_batch_bytes``) always wins;
-2. ``REPRO_EXEC_MAX_BYTES`` overrides from the environment;
-3. accelerators report ``device.memory_stats()`` (``bytes_limit`` -
-   ``bytes_in_use``): chunks shard *evenly*, so the budget is
-   min-free x device count — the least-free device binds the whole set;
-4. host-platform devices (CPU, incl. ``xla_force_host_platform_device_count``
-   splits) share host RAM, read from ``/proc/meminfo`` MemAvailable;
-5. nothing readable -> uncapped (the whole grid in one dispatch).
+Budget derivation order (first readable source wins; `auto_budget_bytes`
+reports which as `ExecPlan.budget_source`):
 
-A fraction (`DEFAULT_MEM_FRACTION`) of the readable figure is budgeted so
-compiler scratch and host buffers keep headroom, and a grid that must be
-chunked sizes each chunk to budget / `pipeline_depth` — the dispatcher
-keeps that many chunks in flight, and they are ALL device-resident.
+1. ``caller`` — an explicit integer budget (the old ``max_batch_bytes``)
+   always wins;
+2. ``env`` — ``REPRO_EXEC_MAX_BYTES`` overrides from the environment;
+3. ``memory_stats`` — accelerators report ``device.memory_stats()``
+   (``bytes_limit`` - ``bytes_in_use``): chunks shard *evenly*, so the
+   budget is min-free x device count — the least-free device binds the
+   whole set;
+4. ``host_meminfo`` — host-platform devices (CPU, incl.
+   ``xla_force_host_platform_device_count`` splits) are slices of one RAM
+   pool, read from ``/proc/meminfo`` MemAvailable;
+5. ``uncapped`` — nothing readable: the whole grid in one dispatch.
+
+A fraction (`DEFAULT_MEM_FRACTION`, 0.8) of the readable figure is
+budgeted so compiler scratch and host buffers keep headroom.
+
+`pipeline_depth` semantics: it is the number of chunks the dispatcher
+keeps in flight *simultaneously* (1 = fully synchronous, 2 = classic
+double buffer — chunk i+1 computes while chunk i is pulled back to host).
+Every in-flight chunk is device-resident, so a grid that must be chunked
+sizes each chunk to ``budget / pipeline_depth`` bytes; deeper pipelines
+buy more compute/readback overlap at the price of narrower chunks.
+
+The per-lane figure comes from `sweep.lane_state_bytes`, which walks the
+exact shapes `engine.make_step(dims, …)` allocates — including the
+``dims.prop_max``-padded wire rings and feedback delay lines — so a
+mixed-latency batch padded to a long wire is billed at the padded size
+and the chunk width shrinks proportionally.
 
 On a multi-device host the chunk width is a multiple of the device count —
 each dispatch shards its lanes evenly across the devices (see

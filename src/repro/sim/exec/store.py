@@ -17,8 +17,10 @@ Two jobs, one object:
 
 * **Benchmark records** — `record_scenario` accumulates one record per
   scenario (wall time, grid points, lanes/sec, XLA compile count, device
-  count, planner provenance) and `write_bench` emits them as
-  ``BENCH_sweep.json``, the machine-readable perf trajectory the nightly
+  count, planner provenance: chunk width and `budget_source` — see
+  `exec.planner` for the budget derivation order those names come from)
+  and `write_bench` emits them as ``BENCH_sweep.json``, the
+  machine-readable perf trajectory the nightly
   (`benchmarks/run.py --scenario all`) finally records.
 """
 from __future__ import annotations

@@ -26,7 +26,10 @@ def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
     t = ctx.t
 
     # ---- write wires / read arrivals ----------------------------------------
-    slot = t % env.PROP
+    # wires are (P, PROP_MAX) rings but wrap at the lane's own traced link
+    # delay, so a packet written now resurfaces exactly `prop_ticks` ticks
+    # later; slots in [prop_ticks, PROP_MAX) are phantom padding
+    slot = t % topo.prop_ticks
     arr_entry = st.wire_f[:, slot]                    # packets arriving now
     arr_hop = st.wire_hop[:, slot]
     new_entry = jnp.where(ctx.can_tx, ctx.tx_entry, -1)
@@ -51,8 +54,10 @@ def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
     just_done = is_delivery & (delivered[a_f] >= ops.size[a_f]) \
         & (st.done[a_f] < 0)
     done = st.done.at[jnp.where(just_done, a_f, F)].set(t)
-    # feedback scatter (ACK + ECN echo + HPCC INT)
-    fb_slot = (t + ops.fb_delay[a_f]) % env.RING
+    # feedback scatter (ACK + ECN echo + HPCC INT); the one-way feedback
+    # delay derives from the lane's traced link delay, never a static shape
+    fb_delay = ops.hops[a_f] * topo.prop_ticks + 1
+    fb_slot = (t + fb_delay) % env.RING
     fb_f = jnp.where(is_delivery, a_f, F)
     ack_ring = st.ack_ring.at[fb_slot, fb_f].add(1)
     mark_ring = st.mark_ring.at[

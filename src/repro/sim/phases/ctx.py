@@ -43,8 +43,10 @@ class PhaseEnv(NamedTuple):
         return self.dims.n_switches
 
     @property
-    def PROP(self) -> int:
-        return self.dims.prop_ticks
+    def PROP_MAX(self) -> int:
+        # padded wire-ring length; each lane wraps at its own traced
+        # `TopoOperands.prop_ticks` <= PROP_MAX
+        return self.dims.prop_max
 
     @property
     def Q(self) -> int:
@@ -72,10 +74,12 @@ class PhaseEnv(NamedTuple):
 
 
 def make_env(dims: TopoDims, cfg: SimConfig, n_flows: int) -> PhaseEnv:
-    # feedback ring sized for the worst-case one-way delay (static so the
-    # compiled program is independent of the workload's actual hop counts)
+    # feedback ring sized for the worst-case one-way delay of the slowest
+    # lane (static so the compiled program is independent of the workload's
+    # actual hop counts and of each lane's true prop_ticks: a ring is a
+    # pure delay line, so oversizing it never changes when feedback lands)
     return PhaseEnv(cfg=cfg, dims=dims, F=int(n_flows),
-                    RING=MAX_HOPS * dims.prop_ticks + 2,
+                    RING=MAX_HOPS * dims.prop_max + 2,
                     RRING=cfg.timing.rto_ticks + 1,
                     bparams=bloom.BloomParams(cfg.bloom_stages,
                                               cfg.bloom_stage_bits))

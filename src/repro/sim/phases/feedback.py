@@ -5,7 +5,15 @@ HPCC max-path-utilization, retransmit credits) and applies the configured
 end-host law: DCTCP's alpha-EWMA window cut, HPCC's reference-window
 utilization rule, or DCQCN's rate decrease / additive-increase timers.
 BFC itself needs none of this (cc='none'): the phase then only books ACKs
-and replays dropped packets."""
+and replays dropped packets.
+
+The feedback rings are delay lines of static length `env.RING`
+(= `MAX_HOPS * dims.prop_max + 2`, the worst case over a batch's lanes):
+`arrivals` scatters at `(t + delay) % RING` with a delay derived from the
+lane's *traced* `prop_ticks`, and this phase drains row `t % RING`, so an
+entry lands exactly `delay` ticks after it was scheduled no matter how far
+the ring was padded — which is why mixed-latency lanes share one program
+bit-identically."""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -29,6 +29,18 @@ Registry:
   incast_plus_background  Beyond-paper: 10% incast on top of a 50-70%
                           loaded fabric, incl. BFC's per-dest variant
                           (queue exhaustion regime of Fig. 17).
+  rtt_sweep               Beyond-paper: link delay 1-64 ticks as a batch
+                          axis — each scheme's sensitivity to wire delay
+                          it was not retuned for (timing constants stay
+                          at the paper's prop=12 calibration; prop_ticks
+                          is a traced operand, so every delay shares one
+                          compilation per protocol).
+  cross_dc_latency        Beyond-paper: long-haul link delays paired with
+                          60% rack-local cross traffic; does backpressure
+                          spare local flows when the far lanes are slow?
+
+`docs/SCENARIOS.md` is the generated reference table of this registry
+(`scripts/gen_scenario_docs.py`; CI fails if it drifts).
 """
 from __future__ import annotations
 
@@ -40,15 +52,21 @@ from .topology import ClosParams, Topology, build, build_cached
 
 
 def topo_tag(clos: ClosParams) -> str:
-    """Short label component identifying a fabric in multi-topology grids."""
+    """Short label component identifying a fabric in multi-topology grids.
+
+    Includes the link delay so fabrics that differ only in `prop_ticks`
+    (the rtt_sweep / cross_dc_latency axes) still get distinct labels."""
     return (f"t{clos.n_tor}x{clos.n_spine}s{clos.n_servers}"
-            f"b{clos.switch_buffer_pkts}")
+            f"b{clos.switch_buffer_pkts}p{clos.prop_ticks}")
 
 
 @dataclass(frozen=True)
 class Scenario:
     name: str
     description: str
+    # paper figure/table this grid reproduces; "" = beyond-paper scenario.
+    # Surfaced by scripts/gen_scenario_docs.py into docs/SCENARIOS.md.
+    paper_ref: str = ""
     workload: str = "fb_hadoop"
     protos: Tuple[str, ...] = ("bfc",)
     loads: Tuple[float, ...] = (0.6,)
@@ -72,6 +90,19 @@ class Scenario:
 
     def degree_axis(self) -> Tuple[int, ...]:
         return self.incast_degrees or (self.incast_degree,)
+
+    def axes(self) -> Dict[str, int]:
+        """Cardinality of every sweep axis (without generating workloads)."""
+        return {"protos": len(self.protos), "loads": len(self.loads),
+                "seeds": len(self.seeds), "degrees": len(self.degree_axis()),
+                "topologies": max(1, len(self.topologies))}
+
+    def grid_size(self) -> int:
+        """Number of grid points `cases()` expands to (= batch lanes)."""
+        n = 1
+        for k in self.axes().values():
+            n *= k
+        return n
 
     def topology_axis(self, default: Optional[ClosParams]
                       ) -> Tuple[ClosParams, ...]:
@@ -186,37 +217,37 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
 
 # ---- the paper's grid --------------------------------------------------------
 register(Scenario(
-    name="fig5_load_sweep",
+    name="fig5_load_sweep", paper_ref="Fig. 5 / Fig. 16",
     description="BFC vs DCTCP, Facebook-Hadoop sizes, 50-90% core load",
     workload="fb_hadoop", protos=("bfc", "dctcp"),
     loads=(0.5, 0.7, 0.8, 0.9), seeds=(16,)))
 
 register(Scenario(
-    name="fig6_incast",
+    name="fig6_incast", paper_ref="Fig. 6 / Fig. 9",
     description="Google workload + 5% incast cross traffic, all schemes",
     workload="google", protos=("bfc", "hpcc", "dcqcn", "dctcp", "ideal_fq"),
     loads=(0.55,), seeds=(9,), incast_load=0.05))
 
 register(Scenario(
-    name="fig10_noincast",
+    name="fig10_noincast", paper_ref="Fig. 10",
     description="Google workload at 60% load, no incast, all schemes",
     workload="google", protos=("bfc", "hpcc", "dcqcn", "dctcp", "ideal_fq"),
     loads=(0.6,), seeds=(9,)))
 
 register(Scenario(
-    name="fig11_noincast",
+    name="fig11_noincast", paper_ref="Fig. 11",
     description="Facebook-Hadoop sizes at 60% load, no incast",
     workload="fb_hadoop", protos=("bfc", "hpcc", "dctcp", "ideal_fq"),
     loads=(0.6,), seeds=(11,)))
 
 register(Scenario(
-    name="fig11_incast",
+    name="fig11_incast", paper_ref="Fig. 11",
     description="Facebook-Hadoop sizes + 5% incast cross traffic",
     workload="fb_hadoop", protos=("bfc", "hpcc", "dctcp", "ideal_fq"),
     loads=(0.55,), seeds=(11,), incast_load=0.05))
 
 register(Scenario(
-    name="table1_long_lived",
+    name="table1_long_lived", paper_ref="Table 1 / Fig. 5",
     description="one long-lived flow vs variable cross traffic",
     workload="fb_hadoop", protos=("bfc", "hpcc", "dcqcn", "hpcc_sfq"),
     loads=(0.6,), seeds=(5,), long_lived=1, drain_ticks=60_000))
@@ -228,7 +259,7 @@ register(Scenario(
     loads=(0.6, 0.8), seeds=(2, 3)))
 
 register(Scenario(
-    name="fig17_incast_degree",
+    name="fig17_incast_degree", paper_ref="Fig. 17",
     description="incast degree sweep 4-64 (Fig. 17): flow- vs dest-keyed "
                 "BFC queues vs HPCC as fan-in exhausts physical queues",
     workload="fb_hadoop", protos=("bfc", "bfc_dest", "hpcc"),
@@ -264,6 +295,39 @@ register(Scenario(
                            switch_buffer_pkts=8192),
                 ClosParams(n_servers=64, n_tor=8, n_spine=8,
                            switch_buffer_pkts=8192))))
+
+def _latency_fabric(prop: int, buffer_pkts: int = 8192) -> ClosParams:
+    """A half-scale fabric whose only varying knob is the link delay."""
+    return ClosParams(n_servers=64, n_tor=8, n_spine=8, prop_ticks=prop,
+                      switch_buffer_pkts=buffer_pkts)
+
+
+register(Scenario(
+    name="rtt_sweep",
+    description="link propagation 1-64 ticks (sub-us rack to campus "
+                "scale): how sensitive is each scheme to wire delay the "
+                "protocol was NOT retuned for? Timing constants (RTT "
+                "epochs, pause window, initial windows) stay at the "
+                "paper's prop=12 calibration by design — retuning them "
+                "per delay would split the compile group (timing is "
+                "static) and would measure configuration, not protocol. "
+                "Every delay rides the batch axis of one compilation "
+                "per protocol (prop_ticks is a traced operand)",
+    workload="fb_hadoop", protos=("bfc", "dctcp", "hpcc"),
+    loads=(0.6,), seeds=(21,),
+    topologies=tuple(_latency_fabric(p) for p in (1, 4, 12, 32, 64))))
+
+register(Scenario(
+    name="cross_dc_latency",
+    description="long-haul link delays (12 / 32 / 64 ticks) under 60% "
+                "rack-local cross traffic: pause propagation must not "
+                "penalize rack-local flows as the wires between racks "
+                "get slow; mixed-latency lanes batch into one program "
+                "(timing constants deliberately frozen at the prop=12 "
+                "calibration — see rtt_sweep)",
+    workload="fb_hadoop", protos=("bfc", "dctcp"),
+    loads=(0.6,), seeds=(22,), locality=0.6,
+    topologies=tuple(_latency_fabric(p) for p in (12, 32, 64))))
 
 register(Scenario(
     name="buffer_sweep",

@@ -19,8 +19,10 @@ program). Padded "phantom" flows are inert by construction:
 * ``routes = -1`` everywhere — a phantom is never looked up by any hop.
 
 Topologies in a batch are likewise padded to a common ``TopoDims`` (max
-ports / servers / switches; ``prop_ticks`` must agree — it is a wire-ring
-shape). Phantom ports/switches/servers are inert by the mirror argument:
+ports / servers / switches / ``prop_max``, the padded wire-ring length —
+each lane's wires wrap at its own traced ``TopoOperands.prop_ticks``
+modulus, so link latency rides the batch axis too). Phantom
+ports/switches/servers are inert by the mirror argument:
 no route names a phantom port, so it never holds occupancy and never
 transmits; phantom servers never source flows, so their NIC lane never wins
 the DRR segment-min; ``port_valid`` / ``switch_valid`` masks keep them out
@@ -93,6 +95,11 @@ _PER_PORT_AXIS0 = {
 _PER_SERVER_AXIS0 = {"nic_ptr"}
 _PER_SERVER_AXIS1 = {"d_q", "d_cnt"}
 _PER_SWITCH_AXIS0 = {"bucket_cnt"}
+# ... and the leaves whose shapes scale with the padded wire-ring length
+# `TopoDims.prop_max`: the wires themselves (axis 1 = PROP_MAX) and the
+# feedback delay lines (axis 0 = MAX_HOPS * prop_max + 2).
+_PER_PROP_AXIS1 = {"wire_f", "wire_hop"}
+_FB_RING_AXIS0 = {"ack_ring", "mark_ring", "u_ring"}
 
 
 def pad_flowset(flows: FlowSet, f_max: int) -> FlowSet:
@@ -167,7 +174,14 @@ def lane_state_bytes(dims: TopoDims, cfg: SimConfig, n_flows: int,
                      n_ticks: int = 0) -> int:
     """Bytes one batch lane holds on device: the padded SimState (~F x H +
     P x Q x CAP ints, measured exactly via eval_shape — no allocation) plus
-    its (T, 3) emit rows. Used to chunk grids against `max_batch_bytes`."""
+    its (T, 3) emit rows. Used to chunk grids against `max_batch_bytes`.
+
+    Because the measurement walks the shapes `make_step(dims, ...)` would
+    allocate, it automatically includes the `dims.prop_max`-padded wire
+    rings (P x prop_max x 2) and feedback delay lines
+    ((4 * prop_max + 2) x F x 3): a mixed-latency batch padded to a long
+    wire bills every lane at the padded size, and the exec planner's chunk
+    width shrinks accordingly."""
     init_state, _ = engine.make_step(dims, engine.static_cfg(cfg), n_flows)
     leaves = jax.tree_util.tree_leaves(jax.eval_shape(init_state))
     state = sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
@@ -176,9 +190,19 @@ def lane_state_bytes(dims: TopoDims, cfg: SimConfig, n_flows: int,
 
 def trim_state(state: SimState, n_flows: int,
                dims: Optional[TopoDims] = None) -> SimState:
-    """Trim the per-flow — and, given `dims`, per-port/server/switch —
+    """Trim the per-flow — and, given `dims`, per-port/server/switch/prop —
     leaves of an (unbatched) SimState back to the workload's true F and the
-    fabric's true shapes, dropping the phantom tails a padded run carries."""
+    fabric's true shapes, dropping the phantom tails a padded run carries.
+
+    Wire rings are trimmed to `dims.prop_max` slots (slots beyond a lane's
+    true delay are never-touched padding). The feedback delay lines are
+    *re-indexed* rather than sliced: two runs padded to different
+    `prop_max` store the same pending feedback at different absolute rows
+    (the ring length is the wrap modulus), so rows are rotated to
+    offset-from-`state.t` order and cut at the fabric's own worst-case
+    delay — after which a prop-padded run is leaf-for-leaf comparable with
+    its unpadded serial twin."""
+    t = int(np.asarray(state.t))
     out = {}
     for name, leaf in state._asdict().items():
         v = np.asarray(leaf)
@@ -195,6 +219,17 @@ def trim_state(state: SimState, n_flows: int,
                 v = v[:dims.n_switches]
             if name in _PER_SERVER_AXIS1:
                 v = v[:, :dims.n_servers]
+            if name in _PER_PROP_AXIS1:
+                v = v[:, :dims.prop_max]
+            elif name in _FB_RING_AXIS0:
+                ring = MAX_HOPS * dims.prop_max + 2
+                if ring > v.shape[0]:
+                    raise ValueError(
+                        f"trim_state: dims.prop_max={dims.prop_max} "
+                        f"implies a {ring}-row feedback ring but the "
+                        f"state holds {v.shape[0]} rows — pass the "
+                        "fabric's own TopoDims, not a batch union")
+                v = v[(t + np.arange(ring)) % v.shape[0]]
         out[name] = v
     return SimState(**out)
 
@@ -293,12 +328,13 @@ def run_grid(topo: Topology,
     configure each group's `exec.ExecPlan` (see `run_batch`)."""
     if n_ticks is None:
         n_ticks = int(max(f.horizon for _, _, f in cases) + drain)
-    # group key: the compile signature — protocol/timing config plus the
-    # one topology field that is a shape (prop_ticks), NOT ClosParams
-    groups: Dict[tuple, List[int]] = {}
+    # group key: the compile signature — the protocol/timing config alone.
+    # NOTHING about a fabric keys the grouping: ports/servers/switches pad
+    # to a union TopoDims and link latency wraps at the traced per-lane
+    # prop_ticks modulus, so mixed-latency grids batch into one program.
+    groups: Dict[SimConfig, List[int]] = {}
     for i, (_, cfg, _) in enumerate(cases):
-        groups.setdefault((engine.static_cfg(cfg), cfg.clos.prop_ticks),
-                          []).append(i)
+        groups.setdefault(engine.static_cfg(cfg), []).append(i)
 
     topos = [_case_topo(cfg, topo) for _, cfg, _ in cases]
     results: List[Optional[CaseResult]] = [None] * len(cases)

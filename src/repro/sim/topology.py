@@ -143,31 +143,33 @@ class TopoDims(NamedTuple):
     """The topology-derived *shapes* of the compiled simulator program.
 
     Everything else about a fabric (port->switch map, PFC feed graph, buffer
-    limit) is a traced `TopoOperands`; only these dims — plus the protocol /
-    timing config — key the XLA compile cache. Two fabrics with equal dims
-    share one executable, and `sweep.py` pads a mixed-topology batch up to a
-    common `TopoDims` so topology can ride the vmap batch axis."""
+    limit, link propagation delay) is a traced `TopoOperands`; only these
+    dims — plus the protocol / timing config — key the XLA compile cache.
+    Two fabrics with equal dims share one executable, and `sweep.py` pads a
+    mixed-topology batch up to a common `TopoDims` so topology can ride the
+    vmap batch axis.
+
+    `prop_max` is the padded wire-ring length: each lane's wires are
+    `(P, prop_max)` arrays, but indexing wraps at the lane's own traced
+    `TopoOperands.prop_ticks` modulus, so fabrics with different link
+    delays still share one program (slots beyond a lane's true delay are
+    never touched)."""
     n_ports: int
     n_servers: int
     n_switches: int
-    prop_ticks: int
+    prop_max: int
 
     @classmethod
     def of(cls, topo: Topology) -> "TopoDims":
         return cls(n_ports=topo.n_ports, n_servers=topo.params.n_servers,
                    n_switches=topo.n_switches,
-                   prop_ticks=topo.params.prop_ticks)
+                   prop_max=topo.params.prop_ticks)
 
     def union(self, other: "TopoDims") -> "TopoDims":
-        if self.prop_ticks != other.prop_ticks:
-            raise ValueError(
-                "topologies in one batch must share prop_ticks "
-                f"({self.prop_ticks} != {other.prop_ticks}): link delay is a "
-                "wire-ring shape, not a traced operand")
         return TopoDims(n_ports=max(self.n_ports, other.n_ports),
                         n_servers=max(self.n_servers, other.n_servers),
                         n_switches=max(self.n_switches, other.n_switches),
-                        prop_ticks=self.prop_ticks)
+                        prop_max=max(self.prop_max, other.prop_max))
 
 
 class TopoOperands(NamedTuple):
@@ -187,8 +189,10 @@ class TopoOperands(NamedTuple):
     port-keyed statistics by `port_valid`; a phantom switch accumulates no
     occupancy and is masked out of `occ_hist` by `switch_valid`; a phantom
     server never sources flows, so its NIC lane never wins the DRR
-    segment-min. A padded run is bit-identical to the unpadded run
-    (tests/test_sim_topo_sweep.py)."""
+    segment-min. Wire-ring slots beyond a lane's `prop_ticks` (up to the
+    padded `TopoDims.prop_max`) are phantom too: indexing wraps at the
+    traced modulus, so they are never written or read. A padded run is
+    bit-identical to the unpadded run (tests/test_sim_topo_sweep.py)."""
     port_switch: jnp.ndarray   # (P,) owning switch; -1 for NIC + phantom
     port_is_nic: jnp.ndarray   # (P,) bool
     port_valid: jnp.ndarray    # (P,) bool, False for phantom padding
@@ -196,6 +200,7 @@ class TopoOperands(NamedTuple):
     switch_valid: jnp.ndarray  # (NSW,) bool, False for phantom padding
     buffer_limit: jnp.ndarray  # () i32 drop threshold (huge if infinite)
     occ_ref: jnp.ndarray       # () i32 occupancy-histogram reference scale
+    prop_ticks: jnp.ndarray    # () i32 link delay = wire-ring wrap modulus
 
 
 def pack_topo(topo: Topology, *, infinite_buffer: bool = False,
@@ -207,11 +212,10 @@ def pack_topo(topo: Topology, *, infinite_buffer: bool = False,
     down-port -> the ToR; ToR down-ports feed servers (-1)."""
     p0 = topo.params
     dims = dims or TopoDims.of(topo)
-    if dims.prop_ticks != p0.prop_ticks:
-        raise ValueError("dims.prop_ticks != topo prop_ticks")
     P, NSW = dims.n_ports, dims.n_switches
     if P < topo.n_ports or NSW < topo.n_switches \
-            or dims.n_servers < p0.n_servers:
+            or dims.n_servers < p0.n_servers \
+            or dims.prop_max < p0.prop_ticks:
         raise ValueError(f"dims {dims} smaller than topology")
 
     port_switch = np.full(P, -1, np.int32)
@@ -242,7 +246,8 @@ def pack_topo(topo: Topology, *, infinite_buffer: bool = False,
         feeds=jnp.asarray(feeds),
         switch_valid=jnp.asarray(switch_valid),
         buffer_limit=jnp.int32(buffer_limit),
-        occ_ref=jnp.int32(p0.switch_buffer_pkts))
+        occ_ref=jnp.int32(p0.switch_buffer_pkts),
+        prop_ticks=jnp.int32(p0.prop_ticks))
 
 
 def path_prop_ticks(routes: np.ndarray, prop_ticks: int) -> np.ndarray:

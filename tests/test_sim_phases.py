@@ -132,7 +132,8 @@ def test_arrivals_delivers_and_schedules_ack():
                      wire_hop=st.wire_hop.at[last_port, 0].set(last_hop))
     ctx = _through(env, st, ops, tops, upto=4)
     assert int(np.asarray(ctx.delivered)[f]) == 1
-    fb = int(np.asarray(ops.fb_delay)[f]) % env.RING
+    # feedback delay is derived in-trace: hops * traced prop_ticks + 1
+    fb = (int(np.asarray(ops.hops)[f]) * CLOS.prop_ticks + 1) % env.RING
     assert int(np.asarray(ctx.ack_ring)[fb, f]) == 1
 
 
@@ -157,7 +158,7 @@ def test_stats_assembles_next_state_and_emit():
 def test_stats_masks_phantom_ports_and_switches():
     dims = TopoDims(n_ports=CLOS.n_servers + 2 * 12 + 2 * 2 + 7,
                     n_servers=CLOS.n_servers + 3,
-                    n_switches=6, prop_ticks=CLOS.prop_ticks)
+                    n_switches=6, prop_max=CLOS.prop_ticks)
     env, st, ops, tops, topo, flows = _setup(dims=dims)
     ctx = _through(env, st, ops, tops, upto=5)
     new_st, _ = phases.stats(env, st, ops, tops, ctx)

@@ -1,11 +1,12 @@
 """Topology as a traced operand: padding inertness, mixed-topology batches,
-and the compile-count contract.
+mixed-latency batches, and the compile-count contract.
 
 Mirrors tests/test_sim_padding.py (phantom flows) for the topology axis:
-a fabric padded to a larger TopoDims must run bit-identically to its
-unpadded self, a mixed-topology batch must match per-topology serial runs
-leaf-for-leaf, and a whole (topology x protocol x seed) grid must compile
-once per protocol variant."""
+a fabric padded to a larger TopoDims — including a longer `prop_max` wire
+ring — must run bit-identically to its unpadded self, mixed-topology and
+mixed-`prop_ticks` batches must match per-case serial runs leaf-for-leaf,
+and a whole (topology x latency x protocol x seed) grid must compile once
+per protocol variant."""
 import numpy as np
 import pytest
 
@@ -18,6 +19,10 @@ from repro.sim.topology import ClosParams, TopoDims, pack_topo
 CLOS_A = ClosParams(n_servers=8, n_tor=2, n_spine=2, switch_buffer_pkts=512)
 CLOS_B = ClosParams(n_servers=12, n_tor=2, n_spine=3,
                     switch_buffer_pkts=1024)
+# same fabric shapes as CLOS_A, 3x faster wires: batches mixing it with
+# CLOS_A/CLOS_B exercise the traced prop_ticks modulus
+CLOS_FAST = ClosParams(n_servers=8, n_tor=2, n_spine=2, prop_ticks=4,
+                       switch_buffer_pkts=512)
 
 
 def _flows(topo, seed, n=40, load=0.5):
@@ -43,7 +48,7 @@ def test_padded_topology_bit_identical_serial():
     dims = TopoDims.of(topo)
     big = TopoDims(n_ports=dims.n_ports + 9, n_servers=dims.n_servers + 4,
                    n_switches=dims.n_switches + 3,
-                   prop_ticks=dims.prop_ticks)
+                   prop_max=dims.prop_max)
 
     go = engine.compiled_runner(big, engine.static_cfg(cfg), flows.n_flows,
                                 n_ticks)
@@ -117,6 +122,76 @@ def test_grid_two_topos_two_protos_two_seeds_two_traces():
         st_s = sweep.trim_state(st_s, flows.n_flows, TopoDims.of(topo))
         assert np.array_equal(r.emits, em_s), label
         _assert_states_equal(r.state, st_s, label)
+
+
+def test_prop_padding_bit_identical_serial():
+    """A lane with prop_ticks=12 padded to prop_max=64 runs bit-identically
+    to its unpadded serial self: wire slots beyond the true delay are never
+    touched (indexing wraps at the traced modulus) and the oversized
+    feedback rings are pure delay lines."""
+    topo = topology.build(CLOS_A)                     # prop_ticks = 12
+    cfg = SimConfig(proto=BFC, clos=CLOS_A)
+    flows = _flows(topo, seed=7)
+    n_ticks = int(flows.horizon + 1000)
+    dims = TopoDims.of(topo)
+    big = dims._replace(prop_max=64)
+
+    go = engine.compiled_runner(big, engine.static_cfg(cfg), flows.n_flows,
+                                n_ticks)
+    st_p, em_p = go(engine.pack_flows(flows, cfg),
+                    pack_topo(topo, dims=big))
+    st_p = engine.SimState(*[np.asarray(x) for x in st_p])
+
+    # phantom wire slots hold nothing: the ring wraps at prop_ticks=12
+    assert (st_p.wire_f[:, CLOS_A.prop_ticks:] == -1).all()
+    assert st_p.wire_hop[:, CLOS_A.prop_ticks:].sum() == 0
+
+    st_u, em_u = engine.run(topo, flows, cfg, n_ticks)
+    assert np.array_equal(np.asarray(em_p), em_u)
+    _assert_states_equal(sweep.trim_state(st_p, flows.n_flows, dims),
+                         sweep.trim_state(st_u, flows.n_flows, dims),
+                         "prop-padded-vs-serial")
+
+
+def test_mixed_prop_ticks_batch_matches_serial():
+    """Fabrics with different link delays (prop 4 / 12, different port
+    counts too) in ONE vmapped batch — one compilation — match their
+    per-latency serial runs bit-for-bit."""
+    topo_f, topo_b = topology.build(CLOS_FAST), topology.build(CLOS_B)
+    cfg_f = SimConfig(proto=BFC, clos=CLOS_FAST)
+    cfg_b = SimConfig(proto=BFC, clos=CLOS_B)
+    fl_f, fl_b = _flows(topo_f, seed=8), _flows(topo_b, seed=9)
+    n_ticks = int(max(fl_f.horizon, fl_b.horizon) + 1000)
+
+    assert sweep.batch_dims([topo_f, topo_b]).prop_max == 12
+    before = engine.trace_count()
+    st, emits = sweep.run_batch([topo_f, topo_b], [fl_f, fl_b], cfg_f,
+                                n_ticks)
+    assert engine.trace_count() - before == 1, \
+        "mixed-latency batch must share one compilation"
+    for k, (topo, cfg, fl) in enumerate([(topo_f, cfg_f, fl_f),
+                                         (topo_b, cfg_b, fl_b)]):
+        st_s, em_s = engine.run(topo, fl, cfg, n_ticks)
+        st_k = sweep.select_config(st, k, fl.n_flows, TopoDims.of(topo))
+        st_s = sweep.trim_state(st_s, fl.n_flows, TopoDims.of(topo))
+        assert np.array_equal(emits[k], em_s), f"lane {k} emits"
+        _assert_states_equal(st_k, st_s, f"lane {k} (prop "
+                             f"{cfg.clos.prop_ticks})")
+
+
+def test_latency_scenarios_expand_with_unique_labels():
+    for name, protos in (("rtt_sweep", 3), ("cross_dc_latency", 2)):
+        sc = scenarios.get(name)
+        labels = []
+        props = set()
+        for label, cfg, _ in sc.cases(n_flows=10):
+            labels.append(label)
+            props.add(cfg.clos.prop_ticks)
+        assert len(labels) == len(set(labels)) == sc.grid_size()
+        assert len(props) == len(sc.topologies) >= 3
+        assert sc.grid_size() == protos * len(sc.topologies)
+    assert {c.prop_ticks for c in scenarios.get("rtt_sweep").topologies} \
+        == {1, 4, 12, 32, 64}
 
 
 def test_run_batch_chunking_matches_unchunked():
