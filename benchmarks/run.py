@@ -2,10 +2,15 @@
 Prints ``name,metric,value`` CSV. Set BENCH_FULL=1 for paper-scale topology;
 use --only substring to filter. ``--scenario NAME`` (or ``all``) runs any
 entry of the experiment registry (repro.sim.scenarios) through the batched
-sweep subsystem instead of the figure list, records the perf trajectory as
-``BENCH_sweep.json`` (``--bench-json`` to relocate, ``--spool-dir`` to also
-spool per-chunk results), and ends with a one-line per-scenario summary
-table; ``--list-scenarios`` shows the registry."""
+sweep subsystem instead of the figure list, records the perf trajectory
+into ``BENCH_sweep.json`` (merge-appended per scenario so it accumulates
+across PRs; ``--bench-json`` to relocate, ``--spool-dir`` to also spool
+per-chunk results), and ends with a one-line per-scenario summary table
+reporting ``active_ticks``/``n_ticks`` from the quiescence early exit.
+``--no-early-exit`` forces the flat scan; ``--flat-baseline`` times both
+and records the speedup; ``--long-lived-pkts`` shrinks the probe flow so
+smoke-scale ``table1_long_lived`` can drain; ``--list-scenarios`` shows
+the registry."""
 from __future__ import annotations
 
 import argparse
@@ -15,21 +20,28 @@ import traceback
 
 
 def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
-                  spool_dir: str = "", **overrides) -> None:
+                  spool_dir: str = "", early_exit: bool = True,
+                  flat_baseline: bool = False, **overrides) -> None:
     """Nightly mode: run registry scenarios through the exec-planned
     batched sweep and record the perf trajectory — each scenario reports
-    its grid size, wall time, lanes/sec, device count, and XLA trace delta
+    its grid size, wall time, lanes/sec, device count, XLA trace delta
     (which must stay at the number of protocol variants, never scale with
-    topologies/loads/degrees/seeds); the run store writes it all to
-    `BENCH_sweep.json` and the run ends with a per-scenario summary table
-    plus the total `engine.trace_count()`."""
+    topologies/loads/degrees/seeds), and the active-horizon profile
+    (max/mean `active_ticks` vs the padded `n_ticks`, plus the arrival
+    phase's sorts-per-tick). `early_exit=False` (--no-early-exit) times
+    the flat scan instead; `flat_baseline=True` (--flat-baseline) runs
+    BOTH and records the measured speedup. The run store merge-appends it
+    all into `BENCH_sweep.json` and the run ends with a per-scenario
+    summary table plus the total `engine.trace_count()`."""
     import tempfile
 
     import jax
+    import numpy as np
 
     from .common import emit, emit_fct_table, run_scenario
-    from repro.sim import engine, scenarios
+    from repro.sim import engine, phases, scenarios
     from repro.sim import exec as exec_
+    from repro.sim.exec import dispatch
 
     # records-only runs root the store in a scratch dir: rooting at "."
     # would reattach any stale manifest.json lying in the cwd
@@ -41,27 +53,57 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
         print(f"# === scenario {name} ===", flush=True)
         t0 = time.time()
         before = engine.trace_count()
+        mark = len(dispatch.ACTIVE_LOG)
         results = run_scenario(name, store=store if spool_dir else None,
-                               **overrides)
+                               early_exit=early_exit, **overrides)
         wall = time.time() - t0
         compiles = engine.trace_count() - before
         grid_points += len(results)
         for r in results:
             emit_fct_table(r.label.replace("/", "_"), r.metrics)
         plan = exec_.last_plan()
+        # active-horizon profile, aggregated over every protocol group the
+        # scenario dispatched (one ACTIVE_LOG entry per execute call)
+        active = (np.concatenate(
+            [a for _, a in dispatch.ACTIVE_LOG[mark:]])
+            if len(dispatch.ACTIVE_LOG) > mark else np.zeros(0, np.int32))
+        n_ticks = plan.n_ticks if plan else 0
+        extras = {}
+        if active.size:
+            extras = {"active_ticks_max": int(active.max()),
+                      "active_ticks_mean": round(float(active.mean()), 1),
+                      "n_ticks": int(n_ticks)}
+        if flat_baseline:
+            t1 = time.time()
+            run_scenario(name, early_exit=False, **overrides)
+            flat_wall = time.time() - t1
+            extras["flat_wall_s"] = round(flat_wall, 3)
+            extras["speedup_vs_flat"] = round(flat_wall / max(wall, 1e-9),
+                                              2)
         rec = store.record_scenario(
             name, wall_s=wall, grid_points=len(results),
             xla_compilations=compiles,
             device_count=plan.n_devices if plan else 1,
             chunk_width=plan.chunk_width if plan else len(results),
-            budget_source=plan.budget_source if plan else "unknown")
+            budget_source=plan.budget_source if plan else "unknown",
+            early_exit=early_exit,
+            sorts_per_tick=phases.SORTS_PER_TICK, **extras)
         emit(f"scenario_{name}", "grid_points", len(results))
         emit(f"scenario_{name}", "xla_compilations", compiles)
         emit(f"scenario_{name}", "wall_s", round(wall, 1))
         emit(f"scenario_{name}", "lanes_per_sec", rec["lanes_per_sec"])
         emit(f"scenario_{name}", "device_count", rec["device_count"])
+        if active.size:
+            emit(f"scenario_{name}", "active_ticks_max", int(active.max()))
+            emit(f"scenario_{name}", "n_ticks", int(n_ticks))
+            emit(f"scenario_{name}", "active_frac",
+                 round(float(active.max()) / max(n_ticks, 1), 3))
+        if "speedup_vs_flat" in extras:
+            emit(f"scenario_{name}", "speedup_vs_flat",
+                 extras["speedup_vs_flat"])
     emit("scenarios", "grid_points_total", grid_points)
     emit("scenarios", "xla_compilations", engine.trace_count())
+    emit("scenarios", "sorts_per_tick", phases.SORTS_PER_TICK)
     path = store.write_bench(bench_json,
                              platform=jax.devices()[0].platform,
                              device_count=len(jax.devices()))
@@ -87,6 +129,18 @@ def main() -> None:
                          "nightly at reduced scale)")
     ap.add_argument("--drain", type=int, default=None,
                     help="override post-horizon drain ticks")
+    ap.add_argument("--long-lived-pkts", type=int, default=None,
+                    help="override the long-lived flow size (smoke-scale "
+                         "table1_long_lived: let the probe flow complete "
+                         "so the drain goes quiescent)")
+    ap.add_argument("--no-early-exit", action="store_true",
+                    help="force the flat (non-segmented) runner — the "
+                         "A/B escape hatch for the active-horizon early "
+                         "exit")
+    ap.add_argument("--flat-baseline", action="store_true",
+                    help="additionally time each scenario on the flat "
+                         "runner and record speedup_vs_flat in "
+                         "BENCH_sweep.json")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -98,10 +152,13 @@ def main() -> None:
         return
     if args.scenario:
         overrides = {k: v for k, v in
-                     (("n_flows", args.n_flows), ("drain", args.drain))
+                     (("n_flows", args.n_flows), ("drain", args.drain),
+                      ("long_lived_pkts", args.long_lived_pkts))
                      if v is not None}
         run_scenarios(args.scenario, bench_json=args.bench_json,
-                      spool_dir=args.spool_dir, **overrides)
+                      spool_dir=args.spool_dir,
+                      early_exit=not args.no_early_exit,
+                      flat_baseline=args.flat_baseline, **overrides)
         return
 
     from . import paper_figs, micro

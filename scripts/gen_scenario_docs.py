@@ -42,7 +42,13 @@ PYTHONPATH=src python -m benchmarks.run --scenario NAME    # or 'all'
 or from Python: `repro.sim.scenarios.run(NAME)`. *Grid* is the number of
 batch lanes the scenario expands to (protocols x loads x seeds x degrees
 x topologies); *reproduces* names the paper figure/table a grid mirrors,
-or `beyond-paper` for scenarios that extend the evaluation.
+or `beyond-paper` for scenarios that extend the evaluation. *Drain* is
+the post-horizon padding (ticks) every lane's `n_ticks` is extended by so
+queues, wires, and feedback rings empty out; the active-horizon runner
+(docs/ARCHITECTURE.md, "Active-horizon execution") early-exits that tail
+the moment a batch goes quiescent, so padded ticks no longer cost
+wall-clock — the per-run `active_ticks` vs `n_ticks` split is recorded in
+`BENCH_sweep.json` by `benchmarks/run.py --scenario`.
 """
 
 
@@ -79,14 +85,14 @@ def render() -> str:
     from repro.sim import scenarios
 
     rows = ["| scenario | reproduces | workload | axes | notable knobs | "
-            "grid |",
-            "|---|---|---|---|---|---|"]
+            "drain | grid |",
+            "|---|---|---|---|---|---|---|"]
     for name in scenarios.names():
         sc = scenarios.get(name)
         rows.append(
             f"| `{name}` | {sc.paper_ref or 'beyond-paper'} "
             f"| {sc.workload} | {_axes_cell(sc)} | {_extras_cell(sc)} "
-            f"| {sc.grid_size()} |")
+            f"| {sc.drain_ticks} | {sc.grid_size()} |")
     total = sum(scenarios.get(n).grid_size() for n in scenarios.names())
     protos = {p for n in scenarios.names()
               for p in scenarios.get(n).protos}

@@ -16,9 +16,13 @@ This script forces 4 simulated host devices, runs the grid once through
 the default auto plan (sharded when multi-device) and once through a
 deliberately chunked 2-device plan, asserts one trace total, and checks
 every grid point bit-for-bit against its own serial `engine.run` (each
-latency compiled alone). It is the cheap canary scripts/ci.sh runs on
-every tier-1 invocation; the full bit-identity matrix lives in
-tests/test_sim_topo_sweep.py and tests/test_sim_exec.py."""
+latency compiled alone). A third pass pushes a drain-heavy mini-grid
+through the segmented active-horizon runner and asserts it compiles once,
+actually early-exits (`active_ticks < n_ticks`), and matches the flat
+scan bit-for-bit. It is the cheap canary scripts/ci.sh runs on every
+tier-1 invocation; the full bit-identity matrix lives in
+tests/test_sim_topo_sweep.py, tests/test_sim_exec.py, and
+tests/test_sim_active_horizon.py."""
 import os
 import sys
 
@@ -128,12 +132,51 @@ def main() -> None:
         assert np.array_equal(r.emits, em), \
             f"{r.label}: chunked/sharded emits diverge from auto plan"
 
+    # 3) active-horizon runner: a drain-heavy mini-grid (tiny horizon,
+    # long quiescent tail) through the segmented early-exit runner must
+    # still compile ONCE, actually exit early (active_ticks < n_ticks),
+    # and stay bit-identical to the flat scan (early_exit=False, its own
+    # deliberate second program)
+    drain_ticks = 2560                     # 5 x DEFAULT_SEGMENT
+    before = engine.trace_count()
+    st_seg, em_seg = sweep.run_batch(topos, flowsets, cfg0, drain_ticks)
+    seg_traces = engine.trace_count() - before
+    active = exec_.last_active_ticks()
+    if seg_traces != 1:
+        print(f"TRACE GUARD FAILED: the segmented early-exit runner "
+              f"compiled {seg_traces}x on a 4-lane drain grid (expected "
+              "exactly 1): the while-loop/segment restructure or its "
+              "cache key regressed.")
+        sys.exit(1)
+    if not (active < drain_ticks).all():
+        print(f"TRACE GUARD FAILED: drain-heavy grid did not early-exit "
+              f"(active_ticks={active.tolist()}, n_ticks={drain_ticks}): "
+              "the quiescence predicate never fired.")
+        sys.exit(1)
+    st_flat, em_flat = sweep.run_batch(topos, flowsets, cfg0, drain_ticks,
+                                       early_exit=False)
+    if not np.array_equal(em_seg, em_flat):
+        print("TRACE GUARD FAILED: segmented early-exit emits diverge "
+              "from the flat scan.")
+        sys.exit(1)
+    bad = [n for n in st_seg._fields
+           if not np.array_equal(np.asarray(getattr(st_seg, n)),
+                                 np.asarray(getattr(st_flat, n)))]
+    if bad:
+        print(f"TRACE GUARD FAILED: segmented early-exit state leaves "
+              f"{bad} diverge from the flat scan — the closed-form tail "
+              "reconstruction or the quiescence predicate is wrong.")
+        sys.exit(1)
+
     print(f"trace guard ok: {len(cases)} grid points "
           f"(2 topologies x 2 link latencies x 2 seeds, bit-identical to "
           f"serial) on {plan.n_devices} device(s), "
           f"{traces} XLA trace; chunked plan "
           f"({ch_plan.n_chunks} x {ch_plan.chunk_width} lanes on "
-          f"{ch_plan.n_devices} dev) added {ch_traces} trace(s)")
+          f"{ch_plan.n_devices} dev) added {ch_traces} trace(s); "
+          f"active-horizon drain grid: 1 trace, early exit at "
+          f"{int(active.max())}/{drain_ticks} ticks, bit-identical to "
+          f"flat scan")
 
 
 if __name__ == "__main__":

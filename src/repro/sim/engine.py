@@ -1,9 +1,22 @@
 """Tick-synchronous, fully vectorized packet-level network simulator.
 
-One XLA program (`jax.lax.scan` over ticks) steps the whole network: every
-egress port transmits at most one MTU packet per tick, packets propagate on
-"wires" with a fixed tick delay, switches run the configured protocol
-(BFC / PFC / DCTCP / DCQCN / HPCC / Ideal-FQ and the paper's ablations).
+One XLA program steps the whole network: every egress port transmits at
+most one MTU packet per tick, packets propagate on "wires" with a fixed
+tick delay, switches run the configured protocol (BFC / PFC / DCTCP /
+DCQCN / HPCC / Ideal-FQ and the paper's ablations).
+
+The runner is **active-horizon aware**: scenario horizons are padded with
+a long drain tail (`n_ticks` = max horizon + drain), and most of that tail
+simulates an empty network. Instead of one flat `lax.scan(n_ticks)`, the
+compiled program runs a `lax.while_loop` over fixed-width tick segments
+(`DEFAULT_SEGMENT`, a static knob): after each segment a batch-wide
+`quiescent` predicate decides whether anything can still change, emits
+land in a preallocated (T, 3) buffer via dynamic slices, and the skipped
+quiescent suffix is reconstructed in closed form (`_finish_tail`) — the
+final state and emits are bit-identical to the flat scan, which survives
+as the `early_exit=False` escape hatch for A/B runs. The runner returns
+`(state, emits, active_ticks)`; `active_ticks` (< n_ticks on early exit)
+feeds the exec layer's readback and the BENCH_sweep perf trajectory.
 
 This module owns the operand/state definitions and the compile cache; the
 per-tick work lives in the phase pipeline under `repro.sim.phases`
@@ -37,6 +50,12 @@ from .topology import TopoDims, Topology, pack_topo
 # Arrival tick of padded "phantom" flows (sweep batching): beyond any
 # simulated horizon, so they never start, never transmit, never allocate.
 PHANTOM_ARRIVAL = int(1 << 30)
+
+# Ticks per while-loop segment of the active-horizon runner: the quiescence
+# check runs once per segment, so a run overshoots the true quiescent point
+# by < one segment. Static (part of the compile-cache key) — every caller
+# must agree on it for the one-compilation-per-protocol contract to hold.
+DEFAULT_SEGMENT = 512
 
 
 class FlowOperands(NamedTuple):
@@ -233,32 +252,144 @@ def static_cfg(cfg: SimConfig) -> SimConfig:
     return replace(cfg, clos=None)
 
 
+def quiescent(st: SimState, ops: FlowOperands) -> jnp.ndarray:
+    """True iff no future tick can change anything but the closed-form
+    leaves `_finish_tail` reconstructs (time, histogram zero-bins, the
+    constant emit row, and the CC/decay replay).
+
+    The predicate is deliberately total: every flow that will ever arrive
+    has completed, nothing is in flight on wires or queues, every delayed
+    feedback / retransmit credit has landed, and every backpressure signal
+    (pause bits, Bloom pipeline, resume rings, PFC) has fully drained. Any
+    weaker condition would let the skipped tail diverge from the flat
+    scan."""
+    flows_done = jnp.all((st.done >= 0) | (ops.arrival >= PHANTOM_ARRIVAL))
+    net_empty = (jnp.all(st.wire_f < 0)
+                 & jnp.all(st.qtail == st.qhead)
+                 & jnp.all(st.f_cnt == 0)
+                 & jnp.all(st.ack_ring == 0)
+                 & jnp.all(st.mark_ring == 0)
+                 & jnp.all(st.u_ring == 0.0)
+                 & jnp.all(st.retx_ring == 0))
+    signals_clear = (jnp.all(st.pl_tail == st.pl_head)
+                     & jnp.all(st.bloom_counts == 0)
+                     & ~jnp.any(st.bloom_mid) & ~jnp.any(st.bloom_rx)
+                     & ~jnp.any(st.f_paused)
+                     & ~jnp.any(st.pfc_paused)
+                     & jnp.all(st.ing_occ == 0))
+    return flows_done & net_empty & signals_clear
+
+
+def _finish_tail(env, st: SimState, emits, topo_ops, n_ticks: int):
+    """Reconstruct ticks [st.t, n_ticks) of a quiescent network in closed
+    form, bit-identical to running the flat scan over them.
+
+    Per quiescent tick the full step changes exactly: `t` (+1), the
+    sampled histograms (zero bins — folded by `phases.tail_hist`), the
+    emit row (constant — `phases.tail_emit_row`), and the per-tick decay /
+    congestion-control leaves (`tx_ewma` EWMA decay, DCQCN token refill,
+    and the epoch-timer laws — replayed with zero feedback through the
+    SAME `phases.cc_laws` the live feedback phase uses, so float op order
+    is identical). Everything else is frozen by the `quiescent` predicate.
+    A no-op when st.t == n_ticks (no early exit)."""
+    pc, tm, F = env.cfg.proto, env.cfg.timing, env.F
+    zero_i = jnp.zeros((F,), I32)
+    zero_f = jnp.zeros((F,), jnp.float32)
+
+    def tick(_, c):
+        tx_ewma, tokens, v = c
+        # switch_tx: can_tx is all-False -> pure EWMA decay on every port
+        tx_ewma = tx_ewma * (1 - 1 / 32)
+        # nic_tx: DCQCN token-bucket refill continues until the 2.0 cap
+        if pc.cc == "dcqcn":
+            tokens = jnp.minimum(tokens + v.rate, 2.0)
+        # feedback: drained rings are all zeros
+        v = phases.cc_laws(pc, tm, v, zero_i, zero_i, zero_f)
+        return tx_ewma, tokens, v
+
+    remaining = jnp.int32(n_ticks) - st.t
+    tx_ewma, tokens, v = jax.lax.fori_loop(
+        0, remaining, tick,
+        (st.tx_ewma, st.tokens, phases.CCVars.of_state(st)))
+
+    st = phases.tail_hist(env, st, topo_ops, n_ticks)
+    row = phases.tail_emit_row(env, st)
+    tail = jnp.arange(n_ticks, dtype=I32)[:, None] >= st.t
+    emits = jnp.where(tail, row[None, :], emits)
+    st = st._replace(
+        t=jnp.int32(n_ticks), tx_ewma=tx_ewma, tokens=tokens,
+        cwnd=v.cwnd, cwnd_ref=v.cwnd_ref, rate=v.rate,
+        rate_target=v.rate_target, alpha=v.alpha, ack_seen=v.ack_seen,
+        mark_seen=v.mark_seen, cc_timer=v.cc_timer, since_dec=v.since_dec)
+    return st, emits
+
+
 def compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
-                    n_ticks: int, unroll: int = 1, batched: bool = False):
+                    n_ticks: int, unroll: int = 1, batched: bool = False,
+                    segment: int = DEFAULT_SEGMENT, early_exit: bool = True):
     """The jitted simulator program for one static signature.
 
     Keyed on everything that shapes the XLA program: `TopoDims`, the
     protocol/timing config (normalized through `static_cfg` here, so
     ClosParams can never fragment the cache), (padded) flow count, tick
-    count. Repeat calls — every topology/seed/load of a sweep, or serial
-    runs over same-shaped cases — reuse the cached executable instead of
-    recompiling the scan. With `batched=True` the returned function takes
-    `FlowOperands` and `TopoOperands` with a leading batch axis and vmaps
-    the whole simulation over both (still a single compilation for the
-    entire grid)."""
+    count, segment width, and the `early_exit` escape hatch. Repeat calls —
+    every topology/seed/load of a sweep, or serial runs over same-shaped
+    cases — reuse the cached executable instead of recompiling. With
+    `batched=True` the returned function takes `FlowOperands` and
+    `TopoOperands` with a leading batch axis and vmaps the whole simulation
+    over both (still a single compilation for the entire grid; the
+    segmented while-loop then runs until every lane is quiescent, masking
+    finished lanes). Returns `(state, emits[T, 3], active_ticks)` —
+    `active_ticks` is the tick the run actually simulated to before the
+    closed-form tail took over (= n_ticks when no early exit)."""
     return _compiled_runner(dims, static_cfg(cfg), n_flows, n_ticks,
-                            unroll, batched)
+                            unroll, batched, segment, early_exit)
 
 
 @functools.lru_cache(maxsize=None)
 def _compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
-                     n_ticks: int, unroll: int, batched: bool):
+                     n_ticks: int, unroll: int, batched: bool,
+                     segment: int, early_exit: bool):
     init_state, step = make_step(dims, cfg, n_flows)
+    env = phases.make_env(dims, cfg, n_flows)
 
-    def one(flow_ops, topo_ops):
+    def seg_scan(st, flow_ops, topo_ops, length):
         return jax.lax.scan(lambda s, _: step(s, flow_ops, topo_ops),
-                            init_state(), None, length=n_ticks,
-                            unroll=unroll)
+                            st, None, length=length, unroll=unroll)
+
+    def one_flat(flow_ops, topo_ops):
+        st, emits = seg_scan(init_state(), flow_ops, topo_ops, n_ticks)
+        return st, emits, st.t
+
+    def one_segmented(flow_ops, topo_ops):
+        # a segment never exceeds the horizon (short runs degenerate to
+        # one while-loop iteration, or to the remainder scan alone)
+        seg = min(segment, n_ticks)
+        n_full, rem = divmod(n_ticks, seg)
+
+        def advance(carry, length):
+            st, emits = carry
+            t0 = st.t
+            st, e = seg_scan(st, flow_ops, topo_ops, length)
+            return st, jax.lax.dynamic_update_slice(
+                emits, e, (t0, jnp.int32(0)))
+
+        st, emits = jax.lax.while_loop(
+            lambda c: (c[0].t < n_full * seg)
+            & ~quiescent(c[0], flow_ops),
+            lambda c: advance(c, seg),
+            (init_state(), jnp.zeros((n_ticks, 3), I32)))
+        if rem:
+            # horizon not a segment multiple: run the remainder unless the
+            # loop already went quiescent (then the tail covers it)
+            st, emits = jax.lax.cond(
+                quiescent(st, flow_ops), lambda c: c,
+                lambda c: advance(c, rem), (st, emits))
+        active = st.t
+        st, emits = _finish_tail(env, st, emits, topo_ops, n_ticks)
+        return st, emits, active
+
+    one = one_flat if not early_exit or n_ticks == 0 else one_segmented
 
     def go(flow_ops, topo_ops):
         TRACE_EVENTS.append((cfg.proto.name, dims, n_flows, n_ticks,
@@ -270,16 +401,20 @@ def _compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
 
 
 def run(topo: Topology, flows, cfg: SimConfig, n_ticks: int,
-        unroll: int = 1):
+        unroll: int = 1, segment: int = DEFAULT_SEGMENT,
+        early_exit: bool = True):
     """Run the simulation for `n_ticks`. Returns (final_state, emits[T,3]).
 
     unroll: ticks inlined per scan iteration. Measured WORSE at 4 on CPU
     (§Perf R9) — the step is gather/scatter-bound, not dispatch-bound — so
-    the default stays 1."""
+    the default stays 1. The active-horizon early exit is on by default
+    (bit-identical by construction); `early_exit=False` forces the flat
+    scan for A/B timing."""
     n_ticks = int(np.ceil(n_ticks / unroll) * unroll)
     dims = TopoDims.of(topo)
     go = compiled_runner(dims, static_cfg(cfg), flows.n_flows, n_ticks,
-                         unroll)
-    st, emits = go(pack_flows(flows, cfg),
-                   pack_topo(topo, infinite_buffer=cfg.proto.infinite_buffer))
+                         unroll, segment=segment, early_exit=early_exit)
+    st, emits, _ = go(pack_flows(flows, cfg),
+                      pack_topo(topo,
+                                infinite_buffer=cfg.proto.infinite_buffer))
     return jax.device_get(st), np.asarray(emits)

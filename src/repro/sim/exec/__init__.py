@@ -20,7 +20,8 @@ fast* it runs:
 `sweep.run_batch` / `run_grid` / `scenarios.run` route through `plan()` +
 `execute()`; see docs/ARCHITECTURE.md ("The execution layer").
 """
-from .dispatch import execute, lane_sharding, last_plan  # noqa: F401
+from .dispatch import (execute, lane_sharding,  # noqa: F401
+                       last_active_ticks, last_plan)
 from .planner import (DEFAULT_MEM_FRACTION, ENV_BUDGET, ExecPlan,  # noqa: F401
                       auto_budget_bytes, device_free_bytes,
                       host_available_bytes, plan)

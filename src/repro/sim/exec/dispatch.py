@@ -36,9 +36,25 @@ from .planner import ExecPlan
 # benchmarks, and trace_guard (what did the planner decide?).
 LAST_PLAN: Optional[ExecPlan] = None
 
+# Per-lane active tick counts of the most recent `execute` call (the tick
+# each lane actually simulated to before the engine's quiescence early
+# exit reconstructed the rest in closed form; == plan.n_ticks when a lane
+# never went quiescent or early exit was off). `ACTIVE_LOG` accumulates
+# one (tag, actives) entry per execute call so multi-group drivers
+# (run_grid, benchmarks) can aggregate across protocol variants; execute
+# drops the oldest entries beyond `ACTIVE_LOG_MAX`, so readers must take
+# a length mark before dispatching and slice from it promptly.
+LAST_ACTIVE: Optional[np.ndarray] = None
+ACTIVE_LOG: List[Tuple[str, np.ndarray]] = []
+ACTIVE_LOG_MAX = 4096
+
 
 def last_plan() -> Optional[ExecPlan]:
     return LAST_PLAN
+
+
+def last_active_ticks() -> Optional[np.ndarray]:
+    return LAST_ACTIVE
 
 
 def lane_sharding(devices: Sequence) -> NamedSharding:
@@ -52,13 +68,14 @@ def _shard_tree(tree, sharding: NamedSharding):
                                   tree)
 
 
-def _land(st, emits, n_real: int) -> Tuple[SimState, np.ndarray]:
+def _land(st, emits, active, n_real: int
+          ) -> Tuple[SimState, np.ndarray, np.ndarray]:
     """Pull one chunk to host and drop its padded lanes (blocks until the
     device is done with this chunk — later chunks keep computing)."""
     st = jax.device_get(st)
     st = SimState(**{name: np.asarray(leaf)[:n_real]
                      for name, leaf in st._asdict().items()})
-    return st, np.asarray(emits)[:n_real]
+    return st, np.asarray(emits)[:n_real], np.asarray(active)[:n_real]
 
 
 def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
@@ -66,12 +83,16 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
     """Run K lanes (workload `flowsets[k]` on fabric `topos[k]`) under one
     protocol config according to `plan`. Returns (batched SimState,
     emits[K, T, 3]) bit-identical to an unchunked single-device
-    `sweep.run_batch`. With a `RunStore`, each chunk's trimmed results are
-    spooled to disk the moment it lands; `collect=False` (requires a
-    store) additionally drops each chunk from host memory once spooled and
-    returns None — the streaming mode for grids whose merged result would
-    not fit on host (reassemble lazily via `store.load_tag(tag)`)."""
-    global LAST_PLAN
+    `sweep.run_batch`. Per-lane `active_ticks` from the engine's
+    quiescence early exit land in `LAST_ACTIVE` / `ACTIVE_LOG` (and in the
+    store manifest) rather than the return value, so existing callers keep
+    their (state, emits) contract. With a `RunStore`, each chunk's trimmed
+    results are spooled to disk the moment it lands; `collect=False`
+    (requires a store) additionally drops each chunk from host memory once
+    spooled and returns None — the streaming mode for grids whose merged
+    result would not fit on host (reassemble lazily via
+    `store.load_tag(tag)`)."""
+    global LAST_PLAN, LAST_ACTIVE
     LAST_PLAN = plan
     if not collect and store is None:
         raise ValueError("collect=False discards results: pass a store")
@@ -89,7 +110,8 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
 
     go = engine.compiled_runner(plan.dims, engine.static_cfg(cfg),
                                 plan.f_max, plan.n_ticks, plan.unroll,
-                                batched=True)
+                                batched=True, segment=plan.segment,
+                                early_exit=plan.early_exit)
     sharding = lane_sharding(plan.devices) if plan.sharded else None
 
     def dispatch(lo: int):
@@ -107,19 +129,21 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
         if sharding is not None:
             ops = _shard_tree(ops, sharding)
             t_ops = _shard_tree(t_ops, sharding)
-        st, emits = go(ops, t_ops)
-        return n_real, st, emits
+        st, emits, active = go(ops, t_ops)
+        return n_real, st, emits, active
 
     chunks: List[Tuple[SimState, np.ndarray]] = []
+    actives: List[np.ndarray] = []
     inflight: deque = deque()
 
     def land_oldest():
-        idx, (n_real, st, emits) = inflight.popleft()
-        landed = _land(st, emits, n_real)
+        idx, (n_real, st, emits, active) = inflight.popleft()
+        st, emits, active = _land(st, emits, active, n_real)
+        actives.append(active)
         if store is not None:
-            store.spool_chunk(tag, idx, *landed)
+            store.spool_chunk(tag, idx, st, emits, active_ticks=active)
         if collect:
-            chunks.append(landed)
+            chunks.append((st, emits))
 
     for idx, lo in enumerate(range(0, K, W)):
         inflight.append((idx, dispatch(lo)))
@@ -127,6 +151,10 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
             land_oldest()
     while inflight:
         land_oldest()
+
+    LAST_ACTIVE = np.concatenate(actives) if actives else np.zeros(0, np.int32)
+    ACTIVE_LOG.append((tag, LAST_ACTIVE))
+    del ACTIVE_LOG[:-ACTIVE_LOG_MAX]      # bound a long-lived process
 
     if not collect:
         return None

@@ -50,6 +50,7 @@ from typing import Optional, Sequence, Tuple, Union
 
 import jax
 
+from ..engine import DEFAULT_SEGMENT
 from ..topology import TopoDims
 
 ENV_BUDGET = "REPRO_EXEC_MAX_BYTES"
@@ -130,6 +131,12 @@ class ExecPlan:
     f_max: int
     n_ticks: int
     unroll: int = 1
+    # active-horizon runner knobs (static: part of the compile-cache key,
+    # so every plan of one sweep must agree on them). `segment` is the tick
+    # width between quiescence checks; `early_exit` False forces the flat
+    # scan (the A/B escape hatch).
+    segment: int = DEFAULT_SEGMENT
+    early_exit: bool = True
 
     @property
     def n_devices(self) -> int:
@@ -150,12 +157,14 @@ class ExecPlan:
     def describe(self) -> str:
         budget = ("uncapped" if self.budget_bytes is None
                   else f"{self.budget_bytes / 2**20:.0f} MiB")
+        runner = (f"segment {self.segment}" if self.early_exit
+                  else "flat scan (early exit off)")
         return (f"ExecPlan: {self.n_lanes} lanes -> {self.n_chunks} "
                 f"chunk(s) x {self.chunk_width} lanes on {self.n_devices} "
                 f"device(s) [{self.lanes_per_device}/dev], "
                 f"{self.per_lane_bytes / 2**20:.1f} MiB/lane, budget "
                 f"{budget} ({self.budget_source}), pipeline depth "
-                f"{self.pipeline_depth}")
+                f"{self.pipeline_depth}, {runner}")
 
 
 @functools.lru_cache(maxsize=None)
@@ -168,11 +177,13 @@ def plan(dims: TopoDims, cfg, f_max: int, n_ticks: int, n_lanes: int, *,
          devices: Optional[Sequence] = None,
          budget: Union[int, str, None] = "auto",
          pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
-         unroll: int = 1) -> ExecPlan:
+         unroll: int = 1, segment: int = DEFAULT_SEGMENT,
+         early_exit: bool = True) -> ExecPlan:
     """Derive an `ExecPlan` for an `n_lanes`-wide grid of one program
     signature. `budget` is an explicit total byte cap, "auto" (read device /
     host memory stats), or None (uncapped). `devices` defaults to every
-    local device."""
+    local device. `segment` / `early_exit` configure the engine's
+    active-horizon runner (see `engine.compiled_runner`)."""
     from .. import engine
     devices = tuple(devices if devices is not None else jax.devices())
     if not devices:
@@ -212,4 +223,5 @@ def plan(dims: TopoDims, cfg, f_max: int, n_ticks: int, n_lanes: int, *,
     return ExecPlan(n_lanes=n_lanes, chunk_width=width, devices=devices,
                     per_lane_bytes=per_lane, budget_bytes=budget_bytes,
                     budget_source=source, pipeline_depth=pipeline_depth,
-                    dims=dims, f_max=f_max, n_ticks=n_ticks, unroll=unroll)
+                    dims=dims, f_max=f_max, n_ticks=n_ticks, unroll=unroll,
+                    segment=segment, early_exit=early_exit)

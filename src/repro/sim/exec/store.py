@@ -17,11 +17,13 @@ Two jobs, one object:
 
 * **Benchmark records** — `record_scenario` accumulates one record per
   scenario (wall time, grid points, lanes/sec, XLA compile count, device
-  count, planner provenance: chunk width and `budget_source` — see
-  `exec.planner` for the budget derivation order those names come from)
-  and `write_bench` emits them as ``BENCH_sweep.json``, the
-  machine-readable perf trajectory the nightly
-  (`benchmarks/run.py --scenario all`) finally records.
+  count, active-vs-padded tick counts from the quiescence early exit,
+  planner provenance: chunk width and `budget_source` — see `exec.planner`
+  for the budget derivation order those names come from) and `write_bench`
+  emits them as ``BENCH_sweep.json``: the latest record per scenario plus
+  a merge-appended per-scenario ``trajectory`` (an existing file's history
+  is preserved and extended), so the committed perf record accumulates
+  across PRs (`benchmarks/run.py --scenario all`).
 """
 from __future__ import annotations
 
@@ -58,20 +60,27 @@ class RunStore:
         return last + 1 if index == 0 else last
 
     def spool_chunk(self, tag: str, index: int, state: SimState,
-                    emits: np.ndarray) -> Path:
+                    emits: np.ndarray,
+                    active_ticks: Optional[np.ndarray] = None) -> Path:
         """Write one landed chunk to disk and persist the manifest.
         Filenames carry a global sequence number and runs of a repeated tag
         (same protocol in different groups/scenarios) are numbered, so
-        nothing ever collides or interleaves."""
+        nothing ever collides or interleaves. `active_ticks` (per-lane
+        ticks actually simulated before the quiescence early exit) is
+        recorded in the manifest entry — readback provenance, not part of
+        the npz round-trip."""
         self.chunk_dir.mkdir(parents=True, exist_ok=True)
         run = self._run_of(tag, index)
         path = (self.chunk_dir /
                 f"{len(self.manifest):04d}_{tag}_r{run}_c{index}.npz")
         np.savez(path, **{_EMITS_KEY: np.asarray(emits)},
                  **{k: np.asarray(v) for k, v in state._asdict().items()})
-        self.manifest.append({
+        entry = {
             "tag": tag, "run": run, "chunk": index, "path": str(path),
-            "lanes": int(np.asarray(emits).shape[0])})
+            "lanes": int(np.asarray(emits).shape[0])}
+        if active_ticks is not None:
+            entry["active_ticks"] = [int(a) for a in np.asarray(active_ticks)]
+        self.manifest.append(entry)
         self.manifest_path.write_text(json.dumps(self.manifest, indent=1)
                                       + "\n")
         return path
@@ -123,29 +132,60 @@ class RunStore:
         return rec
 
     def summary_table(self) -> str:
-        """One line per recorded scenario, aligned for terminal output."""
+        """One line per recorded scenario, aligned for terminal output.
+        The `active` column is max active_ticks / padded n_ticks (the
+        quiescence early exit's win); `vs_flat` the measured wall-clock
+        speedup when a flat baseline was timed."""
         hdr = (f"{'scenario':<28} {'points':>6} {'compiles':>8} "
-               f"{'wall_s':>8} {'lanes/s':>8} {'devices':>7}")
+               f"{'wall_s':>8} {'lanes/s':>8} {'devices':>7} "
+               f"{'active':>13} {'vs_flat':>7}")
         lines = [hdr]
         for name in sorted(self.records):
             r = self.records[name]
             lps = r["lanes_per_sec"]
+            active = ("-" if "active_ticks_max" not in r else
+                      f"{r['active_ticks_max']}/{r.get('n_ticks', 0)}")
+            speedup = ("-" if "speedup_vs_flat" not in r else
+                       f"{r['speedup_vs_flat']:.2f}x")
             lines.append(
                 f"{name:<28} {r['grid_points']:>6} "
                 f"{r['xla_compilations']:>8} {r['wall_s']:>8.1f} "
                 f"{(f'{lps:.2f}' if lps is not None else '-'):>8} "
-                f"{r['device_count']:>7}")
+                f"{r['device_count']:>7} {active:>13} {speedup:>7}")
         return "\n".join(lines)
 
     def write_bench(self, path: Union[str, Path, None] = None,
                     **meta) -> Path:
+        """Emit ``BENCH_sweep.json``, **merge-appending** per scenario:
+        when the target file already exists, its per-scenario history is
+        loaded, this run's records are appended to ``trajectory`` (stamped
+        with run_id/date), and ``scenarios`` becomes the latest record per
+        scenario *across runs* — so the committed perf trajectory
+        accumulates across PRs instead of being overwritten, and partial
+        reruns (one scenario re-benchmarked) never drop the rest."""
         path = Path(path) if path is not None else self.root / BENCH_FILENAME
+        created = time.strftime("%Y-%m-%dT%H:%M:%S")
+        trajectory: Dict[str, List[dict]] = {}
+        latest: Dict[str, dict] = {}
+        if path.exists():
+            try:
+                prior = json.loads(path.read_text())
+                trajectory = {k: list(v) for k, v in
+                              prior.get("trajectory", {}).items()}
+                latest = dict(prior.get("scenarios", {}))
+            except (ValueError, AttributeError):
+                pass  # unreadable prior file: start a fresh trajectory
+        for name, rec in self.records.items():
+            trajectory.setdefault(name, []).append(
+                {"run_id": self.run_id, "recorded_at": created, **rec})
+        latest.update(self.records)
         payload = {
             "run_id": self.run_id,
-            "created_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "created_at": created,
             "chunks_spooled": len(self.manifest),
             **meta,
-            "scenarios": self.records,
+            "scenarios": latest,
+            "trajectory": trajectory,
         }
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(payload, indent=2, sort_keys=False)

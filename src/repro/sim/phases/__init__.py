@@ -19,14 +19,18 @@ Phase order per tick:
   5. feedback          ACK/ECN/INT consumption + congestion-control laws
   6. stats             histograms + next SimState + per-tick emit row
 """
-from .ctx import BIG, I32, PhaseEnv, StepCtx, derive, make_env
+from .ctx import (ArrivalLayout, BIG, I32, PhaseEnv, StepCtx, build_layout,
+                  derive, make_env, pairwise_rank, rank_same_key,
+                  subset_rank)
 from .control import control
 from .switch_tx import switch_tx
 from .nic_tx import nic_tx
-from .arrivals import arrivals
-from .feedback import feedback
-from .stats import stats
+from .arrivals import SORTS_PER_TICK, arrivals
+from .feedback import CCVars, cc_laws, feedback
+from .stats import stats, tail_emit_row, tail_hist
 
-__all__ = ["BIG", "I32", "PhaseEnv", "StepCtx", "derive", "make_env",
-           "control", "switch_tx", "nic_tx", "arrivals", "feedback",
-           "stats"]
+__all__ = ["ArrivalLayout", "BIG", "CCVars", "I32", "PhaseEnv",
+           "SORTS_PER_TICK", "StepCtx", "build_layout", "cc_laws",
+           "control", "derive", "feedback", "make_env", "nic_tx",
+           "pairwise_rank", "rank_same_key", "stats", "subset_rank",
+           "switch_tx", "tail_emit_row", "tail_hist"]

@@ -6,16 +6,32 @@ deliveries schedule delayed feedback (ACK / ECN echo / HPCC INT); switch
 arrivals pass the shared-buffer admission check, get a queue (existing
 assignment, else dynamic first-free / stochastic hash), are ECN-marked,
 enqueued, and may trigger a BFC pause when their queue crosses the dynamic
-threshold. Same-tick same-queue arrivals serialize via pairwise ranks, and
-drops schedule retransmit credits after an RTO."""
+threshold. Drops schedule retransmit credits after an RTO.
+
+Same-tick arrivals serialize through ONE stable argsort per tick (§Perf
+R9 follow-up: the old code paid five `rank_same_key` sort passes): the
+composite `(port * Q + queue)` key is sorted once into an `ArrivalLayout`
+whose single permutation yields the ring-capacity rank, the enqueue
+offset, and the pause-ring push offset as segment positions
+(`subset_rank`), and whose masked key feeds the `counts_per_key` folds.
+The two ranks that must precede the queue assignment — the per-switch
+admission rank and the per-port allocation rank — cannot ride that
+permutation (the composite key does not exist yet) and use the closed
+O(N^2) `pairwise_rank` instead of sorts. All five vectors are
+bit-identical to the former five-sort formulation. `SORTS_PER_TICK`
+documents the count for the benchmark reports."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from ...core import bloom
 from ...core.hashing import hash_u32
-from .ctx import (BIG, I32, PhaseEnv, StepCtx, counts_per_key,
-                  rank_same_key)
+from .ctx import (BIG, I32, PhaseEnv, StepCtx, build_layout, counts_per_key,
+                  pairwise_rank, subset_rank)
+
+# argsorts in one arrival step (the ONE `build_layout` call below); was 5
+# before the composite-key layout. Surfaced in benchmark summaries.
+SORTS_PER_TICK = 1
 
 
 def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
@@ -75,8 +91,9 @@ def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
 
     # switch arrivals ---------------------------------------------------------
     sw_arr = jnp.maximum(topo.port_switch[p_arr], 0)  # target switch
-    # buffer-limit check (serialize same-switch arrivals)
-    rank_sw = rank_same_key(jnp.where(is_sw_arr, sw_arr, -2), is_sw_arr)
+    # buffer-limit check (serialize same-switch arrivals; pre-assignment
+    # rank -> pairwise, not a sort)
+    rank_sw = pairwise_rank(sw_arr, is_sw_arr)
     room = (ctx.sw_occ[sw_arr] + rank_sw) < topo.buffer_limit
     # queue assignment
     f_cnt, f_q = ctx.f_cnt, ctx.f_q
@@ -95,8 +112,7 @@ def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
         free_keyed = jnp.where(free, q_ar[None, :], Q + q_ar[None, :])
         free_order = jnp.argsort(free_keyed[p_arr], axis=1)  # per arrival
         n_free = free[p_arr].sum(axis=1)
-        r_alloc = rank_same_key(jnp.where(needs_alloc, p_arr, -2),
-                                needs_alloc)
+        r_alloc = pairwise_rank(p_arr, needs_alloc)
         got_free = needs_alloc & (r_alloc < n_free)
         q_fresh = jnp.take_along_axis(
             free_order, jnp.minimum(r_alloc, Q - 1)[:, None],
@@ -113,9 +129,11 @@ def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
         # stochastic assignment: collision = lands in a busy queue
         collide = needs_alloc & (occ_after[p_arr, q_new] > 0)
     a_q = jnp.where(have, q_exist, q_new)
+    # THE one sort: every post-assignment rank/offset and both
+    # counts_per_key folds below derive from this composite-key layout
+    layout = build_layout(p_arr * Q + a_q, is_sw_arr)
     # ring-capacity check
-    off_ring = rank_same_key(jnp.where(is_sw_arr, p_arr * Q + a_q, -2),
-                             is_sw_arr)
+    off_ring = subset_rank(layout, is_sw_arr)
     ring_room = (occ_after[p_arr, a_q] + off_ring) < CAP
     accept = is_sw_arr & room & ring_room
     dropped = is_sw_arr & ~accept
@@ -133,13 +151,12 @@ def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
             mark_new = rnd < frac
         a_mark = jnp.maximum(a_mark, mark_new.astype(I32))
     # enqueue scatter (accepted lanes have unique ring slots)
-    off = rank_same_key(jnp.where(accept, p_arr * Q + a_q, -2), accept)
+    off = subset_rank(layout, accept)
     pos_in_ring = (st.qtail[p_arr, a_q] + off) % CAP
     entry_val = a_f * 2 + a_mark
     qbuf = st.qbuf.at[jnp.where(accept, p_arr, P), a_q, pos_in_ring].set(
         entry_val)
-    add_per_pq = counts_per_key(p_arr * Q + a_q, accept,
-                                P * Q).reshape(P, Q)
+    add_per_pq = counts_per_key(layout.key, accept, P * Q).reshape(P, Q)
     qtail = st.qtail + add_per_pq
     occ_new = occ_after + add_per_pq
     # SRF key: min remaining size of flows in queue
@@ -182,12 +199,11 @@ def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
         bloom_counts = bloom.add_batch(
             bloom_counts, p_ar, ops.fpos[a_f], jnp.where(over, 1, 0))
         # push onto the to-be-resumed ring of (p_arr, a_q)
-        push_off = rank_same_key(
-            jnp.where(over, p_arr * Q + a_q, -2), over)
+        push_off = subset_rank(layout, over)
         pl_pos = (pl_tail[p_arr, a_q] + push_off) % PLCAP
         pl = pl.at[jnp.where(over, p_arr, P), a_q, pl_pos].set(a_f)
         pl_tail = pl_tail + counts_per_key(
-            p_arr * Q + a_q, over, P * Q).reshape(P, Q)
+            layout.key, over, P * Q).reshape(P, Q)
         n_pauses = jnp.sum(over.astype(I32))
     else:
         n_pauses = jnp.int32(0)

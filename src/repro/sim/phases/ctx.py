@@ -165,6 +165,11 @@ def rank_same_key(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     end keep rank relative to nothing), then rank = position - group start.
     Equivalent to the naive O(P^2) pairwise count (see §Perf R9); exactness
     is covered by the simulator integrity tests.
+
+    The arrival hot path no longer calls this five times per tick: the
+    three (port, queue)-keyed offsets derive from ONE `ArrivalLayout` sort
+    and the two coarse pre-assignment ranks use `pairwise_rank` (no sort).
+    Kept as the reference implementation and for one-off callers.
     """
     n = keys.shape[0]
     big = jnp.int32(jnp.iinfo(np.int32).max)
@@ -180,6 +185,76 @@ def rank_same_key(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     # invalid lanes must rank as if absent; they never contribute, and their
     # own rank is unused by callers, but keep parity with the naive version
     return jnp.where(valid, rank, jnp.zeros((), I32)).astype(I32)
+
+
+def pairwise_rank(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """`rank_same_key` semantics via the closed O(N^2) pairwise count.
+
+    No sort: an (N, N) equality/triangle mask reduction, cheaper than an
+    argsort for the lane counts this simulator runs (N = ports, a few
+    hundred). Used for the two coarse arrival ranks (per-switch admission,
+    per-port allocation) that must be computed BEFORE the queue assignment
+    exists and therefore cannot ride the `ArrivalLayout` permutation."""
+    n = keys.shape[0]
+    idx = jnp.arange(n)
+    rank = ((keys[None, :] == keys[:, None])
+            & (idx[None, :] < idx[:, None])
+            & valid[None, :]).sum(axis=1).astype(I32)
+    return jnp.where(valid, rank, jnp.zeros((), I32))
+
+
+class ArrivalLayout(NamedTuple):
+    """ONE stable argsort over a composite serialization key; every
+    same-tick rank/offset of the arrival phase derives from this single
+    permutation as a segment position (see `subset_rank`).
+
+    `key` carries INT32_MAX where `valid` is False, so invalid lanes sort
+    to the end as their own group; `group_start[s]` is, in sorted order,
+    the position of the first lane with the same key as position `s`."""
+    key: jnp.ndarray          # (N,) composite key, INT32_MAX where ~valid
+    order: jnp.ndarray        # (N,) THE permutation (stable argsort of key)
+    unsort: jnp.ndarray       # (N,) inverse permutation
+    group_start: jnp.ndarray  # (N,) sorted-order index of each group head
+    valid: jnp.ndarray        # (N,) bool
+
+
+def build_layout(keys: jnp.ndarray, valid: jnp.ndarray) -> ArrivalLayout:
+    """Sort once; rank many. The only per-tick sort of the arrival phase.
+
+    Stability matters twice over: lanes of one key group stay in original
+    index order (so a `subset_rank` at the *same* key granularity is
+    bit-identical to `rank_same_key` over that subset), and repeat calls
+    with equal operands produce the identical permutation."""
+    n = keys.shape[0]
+    big = jnp.int32(jnp.iinfo(np.int32).max)
+    k = jnp.where(valid, keys, big)
+    order = jnp.argsort(k, stable=True)
+    ks = k[order]
+    pos = jnp.arange(n, dtype=I32)
+    new_group = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    group_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(new_group, pos, 0))
+    unsort = jnp.zeros((n,), I32).at[order].set(pos)
+    return ArrivalLayout(key=k, order=order, unsort=unsort,
+                         group_start=group_start, valid=valid)
+
+
+def subset_rank(layout: ArrivalLayout, mask: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = #{j < i : mask[j] and key[j] == key[i]} for mask[i] lanes.
+
+    Requires `mask & ~layout.valid` empty (subsets of the layout's valid
+    set — the arrival phase's masks are nested: over ⊆ accept ⊆ arrivals).
+    A segmented exclusive prefix count over the already-sorted order: the
+    layout's groups are the key's equivalence classes and stable sorting
+    preserved index order inside them, so the count of `mask` lanes earlier
+    in the group equals the count earlier in original index order — i.e.
+    bit-identical to `rank_same_key(where(mask, key, -2), mask)` without
+    re-sorting."""
+    ms = mask[layout.order].astype(I32)
+    excl = jnp.cumsum(ms) - ms                       # subset lanes before s
+    rank_sorted = excl - excl[layout.group_start]    # ... within s's group
+    return jnp.where(mask, rank_sorted[layout.unsort],
+                     jnp.zeros((), I32)).astype(I32)
 
 
 def counts_per_key(keys, valid, num):

@@ -16,36 +16,50 @@ the ring was padded — which is why mixed-latency lanes share one program
 bit-identically."""
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax.numpy as jnp
 
 from .ctx import PhaseEnv, StepCtx
 
 
-def feedback(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
-    pc, tm = env.cfg.proto, env.cfg.timing
-    t = ctx.t
+class CCVars(NamedTuple):
+    """The (F,)-shaped end-host congestion-control state `cc_laws` evolves.
 
-    row = t % env.RING
-    ack_ring, mark_ring, u_ring = ctx.ack_ring, ctx.mark_ring, ctx.u_ring
-    acks_now = ack_ring[row]
-    marks_now = mark_ring[row]
-    u_now = u_ring[row]
-    ack_ring = ack_ring.at[row].set(0)
-    mark_ring = mark_ring.at[row].set(0)
-    u_ring = u_ring.at[row].set(0.0)
-    acked = st.acked + acks_now
-    rrow = t % env.RRING
-    retx_ring = ctx.retx_ring
-    retx_now = retx_ring[rrow]
-    retx_ring = retx_ring.at[rrow].set(0)
-    rem_src = ctx.rem_src + retx_now
-    sent = ctx.sent - retx_now
+    Split out of `SimState` so the engine's active-horizon runner can
+    replay the exact per-tick law update over a skipped quiescent tail
+    (zero feedback) without touching the rest of the state."""
+    cwnd: jnp.ndarray
+    cwnd_ref: jnp.ndarray
+    rate: jnp.ndarray
+    rate_target: jnp.ndarray
+    alpha: jnp.ndarray
+    ack_seen: jnp.ndarray
+    mark_seen: jnp.ndarray
+    cc_timer: jnp.ndarray
+    since_dec: jnp.ndarray
 
-    cwnd, cwnd_ref, alpha = st.cwnd, st.cwnd_ref, st.alpha
-    ack_seen = st.ack_seen + acks_now
-    mark_seen = st.mark_seen + marks_now
-    cc_timer = st.cc_timer - 1
-    rate, rate_target, since_dec = st.rate, st.rate_target, st.since_dec
+    @classmethod
+    def of_state(cls, st) -> "CCVars":
+        return cls(cwnd=st.cwnd, cwnd_ref=st.cwnd_ref, rate=st.rate,
+                   rate_target=st.rate_target, alpha=st.alpha,
+                   ack_seen=st.ack_seen, mark_seen=st.mark_seen,
+                   cc_timer=st.cc_timer, since_dec=st.since_dec)
+
+
+def cc_laws(pc, tm, v: CCVars, acks_now, marks_now, u_now) -> CCVars:
+    """One tick of the configured congestion-control law.
+
+    The ONE code path for the epoch timers and window/rate updates: the
+    live `feedback` phase calls it with this tick's drained feedback rows,
+    and `engine`'s quiescent-tail loop calls it with zeros — bit-identity
+    of the early-exit runner rests on both running these exact ops in this
+    exact order (see docs/ARCHITECTURE.md, "Active-horizon execution")."""
+    cwnd, cwnd_ref, alpha = v.cwnd, v.cwnd_ref, v.alpha
+    ack_seen = v.ack_seen + acks_now
+    mark_seen = v.mark_seen + marks_now
+    cc_timer = v.cc_timer - 1
+    rate, rate_target, since_dec = v.rate, v.rate_target, v.since_dec
     if pc.cc == "dctcp":
         epoch = cc_timer <= 0
         fracm = mark_seen.astype(jnp.float32) / jnp.maximum(ack_seen, 1)
@@ -90,9 +104,38 @@ def feedback(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
         ack_seen = jnp.where(epoch, 0, ack_seen)
         cc_timer = jnp.where(epoch, tm.e2e_rtt_ticks, cc_timer)
 
+    return CCVars(cwnd=cwnd, cwnd_ref=cwnd_ref, rate=rate,
+                  rate_target=rate_target, alpha=alpha, ack_seen=ack_seen,
+                  mark_seen=mark_seen, cc_timer=cc_timer,
+                  since_dec=since_dec)
+
+
+def feedback(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
+    pc, tm = env.cfg.proto, env.cfg.timing
+    t = ctx.t
+
+    row = t % env.RING
+    ack_ring, mark_ring, u_ring = ctx.ack_ring, ctx.mark_ring, ctx.u_ring
+    acks_now = ack_ring[row]
+    marks_now = mark_ring[row]
+    u_now = u_ring[row]
+    ack_ring = ack_ring.at[row].set(0)
+    mark_ring = mark_ring.at[row].set(0)
+    u_ring = u_ring.at[row].set(0.0)
+    acked = st.acked + acks_now
+    rrow = t % env.RRING
+    retx_ring = ctx.retx_ring
+    retx_now = retx_ring[rrow]
+    retx_ring = retx_ring.at[rrow].set(0)
+    rem_src = ctx.rem_src + retx_now
+    sent = ctx.sent - retx_now
+
+    v = cc_laws(pc, tm, CCVars.of_state(st), acks_now, marks_now, u_now)
+
     return ctx._replace(ack_ring=ack_ring, mark_ring=mark_ring,
                         u_ring=u_ring, retx_ring=retx_ring, acked=acked,
-                        rem_src=rem_src, sent=sent, cwnd=cwnd,
-                        cwnd_ref=cwnd_ref, alpha=alpha, ack_seen=ack_seen,
-                        mark_seen=mark_seen, cc_timer=cc_timer, rate=rate,
-                        rate_target=rate_target, since_dec=since_dec)
+                        rem_src=rem_src, sent=sent, cwnd=v.cwnd,
+                        cwnd_ref=v.cwnd_ref, alpha=v.alpha,
+                        ack_seen=v.ack_seen, mark_seen=v.mark_seen,
+                        cc_timer=v.cc_timer, rate=v.rate,
+                        rate_target=v.rate_target, since_dec=v.since_dec)

@@ -5,13 +5,47 @@ histograms every `stat_every` ticks (phantom ports and switches of a padded
 topology are masked out by `port_valid` / `switch_valid`, so padded runs
 keep bit-identical statistics), folds this tick's event counts into the
 running counters, and packs the next SimState plus the per-tick emit row
-(max buffer fill, PFC-paused ports, probe-flow progress)."""
+(max buffer fill, PFC-paused ports, probe-flow progress).
+
+`tail_hist` / `tail_emit_row` are the closed forms of the same sampling
+over a *quiescent* suffix of the horizon: every remaining sample tick adds
+one zero-bin count per valid switch (occ) / valid switch-egress port
+(flows) and nothing to the queue-length histogram, and every remaining
+emit row is the constant `[0, 0, probe]`. The engine's active-horizon
+runner uses them to reconstruct the skipped drain tail bit-identically
+to the flat scan."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from .ctx import I32, PhaseEnv, StepCtx
+
+
+def tail_hist(env: PhaseEnv, st, topo, n_ticks: int):
+    """Fold the histogram samples of ticks [st.t, n_ticks) — all quiescent
+    by the engine's predicate, so every sampled value is zero — into the
+    running histograms in closed form (integer-exact, so bit-identical to
+    having run the flat scan over the tail)."""
+    cfg = env.cfg
+    se = cfg.stat_every
+    # sample ticks are multiples of stat_every: #multiples in [t, n_ticks)
+    n_samp = (jnp.int32(n_ticks) + (se - 1)) // se - (st.t + (se - 1)) // se
+    occ_hist = st.occ_hist.at[0].add(
+        n_samp * topo.switch_valid.sum().astype(I32))
+    flows_hist = st.flows_hist.at[0].add(
+        n_samp * (~topo.port_is_nic & topo.port_valid).sum().astype(I32))
+    # qlen_hist only counts non-empty queues — a quiescent tail adds none
+    return st._replace(occ_hist=occ_hist, flows_hist=flows_hist)
+
+
+def tail_emit_row(env: PhaseEnv, st):
+    """The constant emit row of a quiescent tick: zero buffer fill, zero
+    PFC-paused ports, frozen probe-flow progress."""
+    cfg = env.cfg
+    probe = (st.delivered[cfg.probe_flow]
+             if cfg.probe_flow >= 0 else jnp.int32(0))
+    return jnp.stack([jnp.int32(0), jnp.int32(0), probe])
 
 
 def stats(env: PhaseEnv, st, ops, topo, ctx: StepCtx):

@@ -116,7 +116,8 @@ class Scenario:
 
     def flowset(self, topo: Topology, load: float, seed: int,
                 n_flows: Optional[int] = None,
-                incast_degree: Optional[int] = None):
+                incast_degree: Optional[int] = None,
+                long_lived_pkts: Optional[int] = None):
         from .workload import WorkloadParams, generate
         degree = (incast_degree if incast_degree is not None
                   else self.incast_degree)
@@ -130,11 +131,14 @@ class Scenario:
                             locality=self.locality, seed=seed)
         return generate(topo, wp, n_flows or self.n_flows,
                         long_lived=self.long_lived,
-                        long_lived_pkts=self.long_lived_pkts)
+                        long_lived_pkts=(long_lived_pkts
+                                         if long_lived_pkts is not None
+                                         else self.long_lived_pkts))
 
     def cases(self, topo: Optional[Topology] = None,
               n_flows: Optional[int] = None,
               protos: Optional[Sequence[str]] = None,
+              long_lived_pkts: Optional[int] = None,
               ) -> List[Tuple[str, SimConfig, "object"]]:
         """Expand to (label, SimConfig, FlowSet); flow sets are generated
         once per (topology, load, seed, degree) and shared across protocol
@@ -151,7 +155,8 @@ class Scenario:
                 for s in self.seeds:
                     for d in degs:
                         flowsets[(ci, l, s, d)] = self.flowset(
-                            t, l, s, n_flows, incast_degree=d)
+                            t, l, s, n_flows, incast_degree=d,
+                            long_lived_pkts=long_lived_pkts)
         out = []
         for p in (protos or self.protos):
             for (ci, l, s, d), fl in flowsets.items():
@@ -192,7 +197,8 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
         n_flows: Optional[int] = None, drain: Optional[int] = None,
         unroll: int = 1, max_batch_bytes: Optional[int] = None,
         devices: Optional[Sequence] = None, auto_budget: bool = True,
-        store=None):
+        store=None, early_exit: bool = True,
+        long_lived_pkts: Optional[int] = None):
     """Run one registry scenario through the batched sweep subsystem.
 
     `clos` sets the fabric for scenarios without their own `topologies`
@@ -200,19 +206,23 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
     placement — chunk width, multi-device sharding, chunk spooling — is
     planned per protocol group by `sim.exec` (`devices`, `auto_budget`,
     `max_batch_bytes`, `store` pass through to its planner/dispatcher).
-    Returns a list of sweep.CaseResult (one per grid point), each carrying
-    per-config SimState, emits, and summarized RunMetrics."""
+    `early_exit=False` forces the flat scan (A/B timing baseline);
+    `long_lived_pkts` overrides the long-lived flow size (smoke-scale runs
+    of `table1_long_lived` use it so the probe flow can complete and the
+    drain tail goes quiescent). Returns a list of sweep.CaseResult (one
+    per grid point), each carrying per-config SimState, emits, and
+    summarized RunMetrics."""
     from . import sweep
     sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
           else get(name_or_scenario))
     topo = build(clos or ClosParams())
-    cases = sc.cases(topo, n_flows=n_flows)
+    cases = sc.cases(topo, n_flows=n_flows, long_lived_pkts=long_lived_pkts)
     return sweep.run_grid(topo, cases,
                           drain=(drain if drain is not None
                                  else sc.drain_ticks),
                           unroll=unroll, max_batch_bytes=max_batch_bytes,
                           devices=devices, auto_budget=auto_budget,
-                          store=store)
+                          store=store, early_exit=early_exit)
 
 
 # ---- the paper's grid --------------------------------------------------------

@@ -254,7 +254,8 @@ def run_batch(topo: Union[Topology, Sequence[Topology]],
               unroll: int = 1, pad_multiple: int = PAD_MULTIPLE,
               max_batch_bytes: Optional[int] = None,
               devices: Optional[Sequence] = None, auto_budget: bool = True,
-              plan: Optional["object"] = None, store=None):
+              plan: Optional["object"] = None, store=None,
+              early_exit: bool = True):
     """Run K workloads under one protocol config as a single vmapped,
     jitted program. `topo` is one Topology shared by every lane or a
     per-lane sequence (mixed fabrics are padded to a common `TopoDims`, so
@@ -268,7 +269,9 @@ def run_batch(topo: Union[Topology, Sequence[Topology]],
     the cap). Oversized grids run as equal-width chunks of one shared
     executable, each chunk sharded across `devices` (default: all local
     devices) and double-buffered against host readback; a `store`
-    (`exec.RunStore`) spools chunks to disk as they land."""
+    (`exec.RunStore`) spools chunks to disk as they land. `early_exit`
+    False forces the flat (non-segmented) runner for A/B timing — per-lane
+    active tick counts land in `exec.last_active_ticks()`."""
     from . import exec as exec_
     K = len(flowsets)
     topos = _topo_list(topo, K)
@@ -280,7 +283,8 @@ def run_batch(topo: Union[Topology, Sequence[Topology]],
         budget = (max_batch_bytes if max_batch_bytes is not None
                   else ("auto" if auto_budget else None))
         plan = exec_.plan(dims, cfg, f_max, n_ticks, K, devices=devices,
-                          budget=budget, unroll=unroll)
+                          budget=budget, unroll=unroll,
+                          early_exit=early_exit)
     return exec_.execute(plan, topos, flowsets, cfg, store=store,
                          tag=cfg.proto.name)
 
@@ -313,7 +317,7 @@ def run_grid(topo: Topology,
              summarize: bool = True,
              max_batch_bytes: Optional[int] = None,
              devices: Optional[Sequence] = None, auto_budget: bool = True,
-             store=None) -> List[CaseResult]:
+             store=None, early_exit: bool = True) -> List[CaseResult]:
     """Run an arbitrary (label, SimConfig, FlowSet) grid.
 
     Each case runs on the fabric named by its own ``cfg.clos`` (``topo`` is
@@ -345,7 +349,7 @@ def run_grid(topo: Topology,
         st, emits = run_batch(group_topos, flowsets, cfg, n_ticks, unroll,
                               pad_multiple, max_batch_bytes=max_batch_bytes,
                               devices=devices, auto_budget=auto_budget,
-                              store=store)
+                              store=store, early_exit=early_exit)
         for k, i in enumerate(idxs):
             label, case_cfg, flows = cases[i]
             case_topo = group_topos[k]

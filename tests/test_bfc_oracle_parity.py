@@ -1,0 +1,107 @@
+"""Parity drift guard: `kernels/bfc_step/ref.py` claims "the same math
+`repro.sim.engine` uses inline each tick" — this file enforces it by
+cross-checking the oracle's N_active / threshold / pause / DRR-pick
+against `phases.derive` + `phases.switch_tx` on randomized occupancy and
+pause states. If either side's math drifts (threshold rounding, DRR key
+packing, pause comparison), these tests fail before any figure does."""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+import jax.numpy as jnp
+
+from repro.kernels.bfc_step.ref import bfc_decide_ref
+from repro.sim import engine, phases, topology, workload
+from repro.sim.config import BFC, SimConfig
+from repro.sim.topology import ClosParams, TopoDims, pack_topo
+
+CLOS = ClosParams(n_servers=8, n_tor=2, n_spine=2, switch_buffer_pkts=512)
+
+
+def _setup(n_flows=24):
+    topo = topology.build(CLOS)
+    cfg = engine.static_cfg(SimConfig(proto=BFC, clos=CLOS))
+    flows = workload.generate(
+        topo, workload.WorkloadParams(workload="uniform", load=0.5, seed=3),
+        n_flows)
+    dims = TopoDims.of(topo)
+    env = phases.make_env(dims, cfg, flows.n_flows)
+    init_state, _ = engine.make_step(dims, cfg, flows.n_flows)
+    ops = engine.pack_flows(flows, SimConfig(proto=BFC, clos=CLOS))
+    tops = pack_topo(topo, dims=dims)
+    return env, init_state(), ops, tops, topo, flows
+
+
+def _random_occupancy(rng, env, st, flows, max_occ=5):
+    """Craft a state with random queue occupancy (consistent qbuf/qtail)
+    and a random Bloom-pause pattern (whole ports paused via bloom_rx, the
+    granularity the snapshot filter can express deterministically)."""
+    P, Q, F = env.P, env.Q, env.F
+    occ = rng.integers(0, max_occ + 1, (P, Q)).astype(np.int32)
+    occ[np.asarray(flows.src), :] = 0              # NIC ports stay simple
+    qbuf = np.full((P, Q, env.CAP), -1, np.int32)
+    for p, q in zip(*np.nonzero(occ)):
+        fs = rng.integers(0, F, occ[p, q])
+        qbuf[p, q, :occ[p, q]] = fs * 2
+    paused_ports = rng.random(P) < 0.3
+    bloom_rx = np.zeros(np.asarray(st.bloom_rx).shape, bool)
+    bloom_rx[paused_ports] = True                  # every lookup hits
+    return st._replace(qbuf=jnp.asarray(qbuf),
+                       qtail=jnp.asarray(occ),
+                       qptr=jnp.asarray(
+                           rng.integers(0, Q, P).astype(np.int32)),
+                       bloom_rx=jnp.asarray(bloom_rx)), occ
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_threshold_and_pause_match_oracle(seed):
+    """derive()'s dynamic threshold (ceil(pause_window / N_active)) and
+    the pause comparison (queue length > threshold) must equal the
+    oracle's integer formulation on random occupancy/pause states."""
+    env, st, ops, tops, topo, flows = _setup()
+    rng = np.random.default_rng(seed)
+    st, occ = _random_occupancy(rng, env, st, flows)
+    ctx = phases.derive(env, st, ops, tops)
+    qpaused = np.asarray(ctx.qpaused)
+
+    n_act, th, pause, _ = bfc_decide_ref(
+        jnp.asarray(occ), jnp.asarray(qpaused), st.qptr,
+        pause_window=env.cfg.timing.pause_window)
+    # N_active: clamped count of non-empty unpaused queues
+    want_n = np.maximum(((occ > 0) & ~qpaused).sum(1), 1)
+    assert np.array_equal(np.asarray(n_act), want_n)
+    # threshold: the float-ceil in derive equals the oracle's integer ceil
+    assert np.array_equal(np.asarray(ctx.th), np.asarray(th))
+    # pause decision: arrivals pause a flow when its queue length exceeds
+    # the port threshold — the oracle's matrix form of the same comparison
+    assert np.array_equal(np.asarray(pause), occ > np.asarray(ctx.th)[:, None])
+
+
+@pytest.mark.parametrize("seed", [10, 11, 12, 13])
+def test_drr_pick_matches_oracle(seed):
+    """switch_tx's packed DRR segment-min picks the same queue as the
+    oracle on every eligible switch port."""
+    env, st, ops, tops, topo, flows = _setup()
+    rng = np.random.default_rng(seed)
+    st, occ = _random_occupancy(rng, env, st, flows)
+    ctx = phases.derive(env, st, ops, tops)
+    ctx = phases.control(env, st, ops, tops, ctx)
+    ctx = phases.switch_tx(env, st, ops, tops, ctx)
+
+    _, _, _, sel = bfc_decide_ref(
+        jnp.asarray(occ), ctx.qpaused, st.qptr,
+        pause_window=env.cfg.timing.pause_window)
+    sel = np.asarray(sel)
+    can_tx = np.asarray(ctx.can_tx)
+    got = np.where(can_tx, np.asarray(ctx.tx_entry) >> 1, -1)
+    # compare on switch egress ports only (the oracle models no NIC/PFC)
+    sw = ~np.asarray(tops.port_is_nic)
+    assert np.array_equal(can_tx[sw], sel[sw] >= 0)
+    for p in np.nonzero(sw & can_tx)[0]:
+        q = sel[p]
+        assert q >= 0
+        # the transmitted packet is the head of the oracle-picked queue
+        head = np.asarray(st.qbuf)[p, q, np.asarray(st.qhead)[p, q]
+                                   % env.CAP]
+        assert head >> 1 == got[p], f"port {p}: queue pick drifted"

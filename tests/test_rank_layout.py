@@ -1,0 +1,107 @@
+"""Property tests for the arrival serialization primitives.
+
+The naive O(N^2) pairwise count is the ground truth: for every lane i,
+rank[i] = #{j < i : valid[j] and keys[j] == keys[i]}. The sort-based
+`rank_same_key`, the sort-free `pairwise_rank`, and the one-sort
+`ArrivalLayout` (`build_layout` + `subset_rank`) must all equal it — on
+random keys and validity masks, including the all-invalid and single-lane
+edge cases — and `subset_rank` must equal the oracle for every subset of
+the layout's valid set (the property the arrival phase's nested masks
+over ⊆ accept ⊆ arrivals rely on).
+
+Hypothesis drives the search when installed; a seeded-rng sweep of the
+same property always runs, so the suite never depends on the optional
+dep (the repo's test_sim_padding.py convention)."""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+import jax.numpy as jnp
+
+from repro.sim.phases.ctx import (build_layout, pairwise_rank,
+                                  rank_same_key, subset_rank)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def naive_rank(keys: np.ndarray, valid: np.ndarray) -> np.ndarray:
+    """The O(N^2) oracle, in index order."""
+    n = len(keys)
+    out = np.zeros(n, np.int32)
+    for i in range(n):
+        if valid[i]:
+            out[i] = sum(1 for j in range(i)
+                         if valid[j] and keys[j] == keys[i])
+    return out
+
+
+def _check_all(keys: np.ndarray, valid: np.ndarray, sub: np.ndarray):
+    """All three implementations equal the oracle, and the ONE layout
+    permutation serves any nested subset exactly."""
+    want = naive_rank(keys, valid)
+    jk, jv = jnp.asarray(keys), jnp.asarray(valid)
+    assert np.array_equal(
+        np.asarray(rank_same_key(jnp.where(jv, jk, -2), jv)), want)
+    assert np.array_equal(np.asarray(pairwise_rank(jk, jv)), want)
+    layout = build_layout(jk, jv)
+    assert np.array_equal(np.asarray(subset_rank(layout, jv)), want)
+    assert np.array_equal(np.asarray(subset_rank(layout, jnp.asarray(sub))),
+                          naive_rank(keys, sub))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def keyed_lanes(draw, max_n=24, max_key=6):
+        n = draw(st.integers(min_value=1, max_value=max_n))
+        keys = draw(st.lists(st.integers(0, max_key),
+                             min_size=n, max_size=n))
+        valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+        # subset of valid (the arrival phase's masks are always nested)
+        sub = [v and draw(st.booleans()) for v in valid]
+        return (np.asarray(keys, np.int32), np.asarray(valid, bool),
+                np.asarray(sub, bool))
+
+    @given(keyed_lanes())
+    @settings(max_examples=120, deadline=None)
+    def test_rank_implementations_match_naive_oracle_hypothesis(data):
+        _check_all(*data)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_rank_implementations_match_naive_oracle_rng(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(12):
+        n = int(rng.integers(1, 40))
+        keys = rng.integers(0, 6, n).astype(np.int32)
+        valid = rng.random(n) < rng.random()
+        sub = valid & (rng.random(n) < 0.6)
+        _check_all(keys, valid, sub)
+
+
+def test_edge_cases_all_invalid_and_single_lane():
+    for keys, valid in [([3], [True]), ([3], [False]),
+                        ([5, 5, 5], [False, False, False]),
+                        ([0, 0, 0, 0], [True, True, True, True])]:
+        keys = np.asarray(keys, np.int32)
+        valid = np.asarray(valid, bool)
+        _check_all(keys, valid, np.zeros_like(valid))
+
+
+def test_layout_ranks_are_dense_slot_offsets():
+    """Within one key group the subset ranks are 0..k-1 in index order —
+    the property that makes them collision-free ring offsets."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(1, 40))
+        keys = rng.integers(0, 5, n).astype(np.int32)
+        valid = rng.random(n) < 0.7
+        layout = build_layout(jnp.asarray(keys), jnp.asarray(valid))
+        rank = np.asarray(subset_rank(layout, jnp.asarray(valid)))
+        for k in np.unique(keys[valid]):
+            got = rank[valid & (keys == k)]
+            assert sorted(got) == list(range(len(got)))

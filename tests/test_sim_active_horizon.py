@@ -1,0 +1,174 @@
+"""Active-horizon execution: the segmented quiescence-early-exit runner
+must be bit-identical to the flat scan — final state (after trim_state)
+and emits, leaf for leaf — while actually exiting early on drain-dominated
+horizons, across protocol families whose quiescent tails differ (BFC's
+frozen state vs DCTCP/DCQCN/HPCC epoch timers and DCQCN's token refill)."""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+import jax.numpy as jnp
+
+from repro.sim import engine, sweep, topology, workload
+from repro.sim import exec as exec_
+from repro.sim.config import (BFC, BFC_DEST, DCQCN, DCTCP, HPCC, IDEAL_FQ,
+                              SimConfig)
+from repro.sim.topology import ClosParams, TopoDims
+
+CLOS = ClosParams(n_servers=16, n_tor=2, n_spine=2, switch_buffer_pkts=2048)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    topo = topology.build(CLOS)
+    wp = workload.WorkloadParams(workload="uniform", load=0.5, seed=7)
+    return topo, workload.generate(topo, wp, n_flows=48)
+
+
+def _assert_states_equal(a, b, label):
+    for name in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, name)),
+                              np.asarray(getattr(b, name))), \
+            f"{label}: SimState.{name}"
+
+
+def _run_with_active(topo, flows, cfg, n_ticks, **kw):
+    go = engine.compiled_runner(TopoDims.of(topo), engine.static_cfg(cfg),
+                                flows.n_flows, n_ticks, **kw)
+    st, emits, active = go(
+        engine.pack_flows(flows, cfg),
+        topology.pack_topo(topo,
+                           infinite_buffer=cfg.proto.infinite_buffer))
+    return st, np.asarray(emits), int(active)
+
+
+@pytest.mark.parametrize("proto", [BFC, BFC_DEST, DCTCP, DCQCN, HPCC,
+                                   IDEAL_FQ],
+                         ids=lambda p: p.name)
+def test_segmented_bit_identical_to_flat_and_exits_early(tiny, proto):
+    """The acceptance property per CC family: a drain-dominated horizon
+    early-exits (active_ticks < n_ticks) with results leaf-for-leaf equal
+    to the flat scan — including the epoch-timer / token-refill tails the
+    closed-form reconstruction replays."""
+    topo, flows = tiny
+    cfg = SimConfig(proto=proto, clos=CLOS)
+    n_ticks = int(flows.horizon + 3000)           # mostly drain
+    st_f, em_f = engine.run(topo, flows, cfg, n_ticks, early_exit=False)
+    st_s, em_s, active = _run_with_active(topo, flows, cfg, n_ticks)
+    assert active < n_ticks, "drain-dominated run must exit early"
+    assert int(st_s.t) == n_ticks                 # t advanced to the end
+    assert np.array_equal(em_f, em_s)
+    _assert_states_equal(sweep.trim_state(engine.SimState(
+        *[np.asarray(x) for x in st_s]), flows.n_flows),
+        sweep.trim_state(st_f, flows.n_flows), proto.name)
+
+
+def test_segment_not_dividing_horizon(tiny):
+    """The remainder scan (n_ticks % segment != 0) composes with the
+    while-loop segments bit-identically, early exit on or off."""
+    topo, flows = tiny
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    n_ticks = int(flows.horizon + 700)            # 700 % 512 != 0
+    st_f, em_f = engine.run(topo, flows, cfg, n_ticks, early_exit=False)
+    st_s, em_s = engine.run(topo, flows, cfg, n_ticks)
+    assert np.array_equal(em_f, em_s)
+    _assert_states_equal(st_f, st_s, "remainder")
+    # segment wider than the horizon: one remainder scan, still identical
+    st_w, em_w = engine.run(topo, flows, cfg, n_ticks, segment=4096)
+    assert np.array_equal(em_f, em_w)
+    _assert_states_equal(st_f, st_w, "wide segment")
+
+
+def test_probe_flow_emit_reconstruction(tiny):
+    """The tail's constant emit row carries the frozen probe-flow
+    progress — identical to what the flat scan keeps emitting."""
+    topo, flows = tiny
+    cfg = SimConfig(proto=BFC, clos=CLOS, probe_flow=0)
+    n_ticks = int(flows.horizon + 2500)
+    st_f, em_f = engine.run(topo, flows, cfg, n_ticks, early_exit=False)
+    st_s, em_s, active = _run_with_active(topo, flows, cfg, n_ticks)
+    assert active < n_ticks
+    assert np.array_equal(em_f, em_s)
+    assert (em_s[active:, 2] ==
+            int(np.asarray(st_f.delivered)[0])).all()
+
+
+def test_active_ticks_through_exec_layer(tiny):
+    """run_batch surfaces per-lane active ticks via exec.last_active_ticks
+    and honors the early_exit escape hatch (flat: active == n_ticks)."""
+    topo, flows = tiny
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    flowsets = [flows, flows]
+    n_ticks = int(flows.horizon + 3000)
+    st_b, em_b = sweep.run_batch(topo, flowsets, cfg, n_ticks)
+    active = exec_.last_active_ticks()
+    assert active.shape == (2,) and (active < n_ticks).all()
+    assert exec_.last_plan().early_exit
+    st_flat, em_flat = sweep.run_batch(topo, flowsets, cfg, n_ticks,
+                                       early_exit=False)
+    assert (exec_.last_active_ticks() == n_ticks).all()
+    assert not exec_.last_plan().early_exit
+    assert np.array_equal(em_b, em_flat)
+    _assert_states_equal(st_b, st_flat, "batch flat-vs-segmented")
+
+
+def test_quiescence_predicate(tiny):
+    """quiescent() is False while anything can still change and True on a
+    fully drained state."""
+    topo, flows = tiny
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    init_state, _ = engine.make_step(TopoDims.of(topo),
+                                     engine.static_cfg(cfg), flows.n_flows)
+    ops = engine.pack_flows(flows, cfg)
+    st = init_state()
+    assert not bool(engine.quiescent(st, ops))    # flows not yet done
+    done = st._replace(done=jnp.zeros_like(st.done))
+    assert bool(engine.quiescent(done, ops))
+    # any in-flight or pending signal flips it back
+    assert not bool(engine.quiescent(
+        done._replace(wire_f=done.wire_f.at[0, 0].set(4)), ops))
+    assert not bool(engine.quiescent(
+        done._replace(qtail=done.qtail.at[0, 0].set(1)), ops))
+    assert not bool(engine.quiescent(
+        done._replace(retx_ring=done.retx_ring.at[0, 0].set(1)), ops))
+    assert not bool(engine.quiescent(
+        done._replace(f_paused=done.f_paused.at[0, 0].set(True)), ops))
+    assert not bool(engine.quiescent(
+        done._replace(pl_tail=done.pl_tail.at[0, 0].set(1)), ops))
+
+
+def test_phantom_only_lane_is_quiescent_from_tick_zero():
+    """A lane of pure phantom flows (the padding contract's degenerate
+    case) early-exits immediately and still reconstructs histograms and
+    emits exactly as the flat scan would."""
+    topo = topology.build(CLOS)
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    flows = workload.generate(
+        topo, workload.WorkloadParams(workload="uniform", seed=1), 8)
+    phantom = sweep.pad_flowset(flows, 16)
+    phantom.arrival_tick[:] = engine.PHANTOM_ARRIVAL
+    phantom.size_pkts[:] = 0
+    phantom.routes[:] = -1
+    n_ticks = 900
+    st_f, em_f = engine.run(topo, phantom, cfg, n_ticks, early_exit=False)
+    st_s, em_s, active = _run_with_active(topo, phantom, cfg, n_ticks)
+    assert active == 0
+    assert np.array_equal(em_f, em_s)
+    _assert_states_equal(engine.SimState(*[np.asarray(x) for x in st_s]),
+                         st_f, "phantom-only")
+
+
+def test_one_compilation_shared_by_run_and_dispatch(tiny):
+    """engine.run and the exec dispatcher must agree on the segment /
+    early-exit defaults — mismatched knobs would fragment the compile
+    cache that the one-compilation-per-protocol contract relies on."""
+    topo, flows = tiny
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    n_ticks = 1024
+    engine.run(topo, flows, cfg, n_ticks)
+    before = engine.trace_count()
+    engine.run(topo, flows, cfg, n_ticks)         # cached
+    assert engine.trace_count() == before
+    plan = exec_.plan(TopoDims.of(topo), cfg, flows.n_flows, n_ticks, 1)
+    assert plan.segment == engine.DEFAULT_SEGMENT and plan.early_exit

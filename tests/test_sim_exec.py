@@ -222,6 +222,9 @@ def test_store_spools_chunks_and_reloads(topo, cfg, tmp_path):
                              max_batch_bytes=2 * per, store=store)
     assert len(store.manifest) == exec_.last_plan().n_chunks
     assert sum(e["lanes"] for e in store.manifest) == 5
+    # readback provenance: per-lane active ticks land in the manifest
+    assert all(len(e["active_ticks"]) == e["lanes"]
+               for e in store.manifest)
     mst, mem = store.load_tag(cfg.proto.name)
     assert np.array_equal(mem, em)
     _states_equal(mst, st, "spooled reload")
@@ -280,7 +283,8 @@ def test_store_records_and_writes_bench_json(tmp_path):
     store = exec_.RunStore(tmp_path, run_id="test")
     store.record_scenario("fig5_load_sweep", wall_s=2.0, grid_points=8,
                           xla_compilations=2, device_count=N_DEV,
-                          budget_source="host_meminfo")
+                          budget_source="host_meminfo",
+                          active_ticks_max=512, n_ticks=4000)
     path = store.write_bench(platform="cpu", device_count=N_DEV)
     data = json.loads(path.read_text())
     rec = data["scenarios"]["fig5_load_sweep"]
@@ -288,9 +292,46 @@ def test_store_records_and_writes_bench_json(tmp_path):
     assert rec["lanes_per_sec"] == 4.0
     assert rec["xla_compilations"] == 2
     assert rec["device_count"] == N_DEV
+    assert rec["active_ticks_max"] == 512 and rec["n_ticks"] == 4000
     assert data["device_count"] == N_DEV and data["run_id"] == "test"
     table = store.summary_table()
     assert "fig5_load_sweep" in table and len(table.splitlines()) == 2
+    assert "512/4000" in table
+
+
+def test_write_bench_merge_appends_trajectory(tmp_path):
+    """Re-running the nightly against an existing BENCH_sweep.json must
+    extend the per-scenario trajectory, never overwrite it — the
+    committed perf record accumulates across PRs."""
+    a = exec_.RunStore(tmp_path, run_id="pr5")
+    a.record_scenario("fig5_load_sweep", wall_s=4.0, grid_points=8,
+                      xla_compilations=2, device_count=1)
+    path = a.write_bench(tmp_path / "BENCH_sweep.json")
+    b = exec_.RunStore(tmp_path, run_id="pr6")
+    b.record_scenario("fig5_load_sweep", wall_s=2.0, grid_points=8,
+                      xla_compilations=2, device_count=1)
+    b.record_scenario("websearch_tail", wall_s=1.0, grid_points=4,
+                      xla_compilations=3, device_count=1)
+    data = json.loads(b.write_bench(path).read_text())
+    # latest-per-scenario view: run b's record wins for the re-run
+    # scenario, and scenarios run a covered are kept
+    assert data["run_id"] == "pr6"
+    assert data["scenarios"]["fig5_load_sweep"]["wall_s"] == 2.0
+    # ... while the trajectory accumulated both runs in order
+    traj = data["trajectory"]["fig5_load_sweep"]
+    assert [e["run_id"] for e in traj] == ["pr5", "pr6"]
+    assert [e["wall_s"] for e in traj] == [4.0, 2.0]
+    assert [e["run_id"] for e in data["trajectory"]["websearch_tail"]] == \
+        ["pr6"]
+    # a partial rerun (one scenario only) keeps the other latest records
+    c = exec_.RunStore(tmp_path, run_id="pr7")
+    c.record_scenario("websearch_tail", wall_s=0.5, grid_points=4,
+                      xla_compilations=3, device_count=1)
+    data = json.loads(c.write_bench(path).read_text())
+    assert data["scenarios"]["websearch_tail"]["wall_s"] == 0.5
+    assert data["scenarios"]["fig5_load_sweep"]["wall_s"] == 2.0
+    assert [e["run_id"] for e in data["trajectory"]["websearch_tail"]] == \
+        ["pr6", "pr7"]
 
 
 def test_run_grid_mixed_protocols_through_planner(topo, cfg):

@@ -52,8 +52,8 @@ def test_padded_topology_bit_identical_serial():
 
     go = engine.compiled_runner(big, engine.static_cfg(cfg), flows.n_flows,
                                 n_ticks)
-    st_p, em_p = go(engine.pack_flows(flows, cfg),
-                    pack_topo(topo, dims=big))
+    st_p, em_p, _ = go(engine.pack_flows(flows, cfg),
+                       pack_topo(topo, dims=big))
     st_p = engine.SimState(*[np.asarray(x) for x in st_p])
     st_u, em_u = engine.run(topo, flows, cfg, n_ticks)
 
@@ -138,8 +138,8 @@ def test_prop_padding_bit_identical_serial():
 
     go = engine.compiled_runner(big, engine.static_cfg(cfg), flows.n_flows,
                                 n_ticks)
-    st_p, em_p = go(engine.pack_flows(flows, cfg),
-                    pack_topo(topo, dims=big))
+    st_p, em_p, _ = go(engine.pack_flows(flows, cfg),
+                       pack_topo(topo, dims=big))
     st_p = engine.SimState(*[np.asarray(x) for x in st_p])
 
     # phantom wire slots hold nothing: the ring wraps at prop_ticks=12
