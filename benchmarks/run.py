@@ -8,9 +8,11 @@ across PRs; ``--bench-json`` to relocate, ``--spool-dir`` to also spool
 per-chunk results), and ends with a one-line per-scenario summary table
 reporting ``active_ticks``/``n_ticks`` from the quiescence early exit.
 ``--no-early-exit`` forces the flat scan; ``--flat-baseline`` times both
-and records the speedup; ``--long-lived-pkts`` shrinks the probe flow so
-smoke-scale ``table1_long_lived`` can drain; ``--list-scenarios`` shows
-the registry."""
+and records the speedup; ``--kernel-impl``/``--kernel-baseline`` pick (or
+A/B) the switch-decision path and record per-path per-tick wall time;
+``--long-lived-pkts`` shrinks the probe flow so smoke-scale
+``table1_long_lived`` can drain; ``--list-scenarios`` shows the
+registry."""
 from __future__ import annotations
 
 import argparse
@@ -21,7 +23,8 @@ import traceback
 
 def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
                   spool_dir: str = "", early_exit: bool = True,
-                  flat_baseline: bool = False, **overrides) -> None:
+                  flat_baseline: bool = False, kernel_impl: str = "",
+                  kernel_baseline: bool = False, **overrides) -> None:
     """Nightly mode: run registry scenarios through the exec-planned
     batched sweep and record the perf trajectory — each scenario reports
     its grid size, wall time, lanes/sec, device count, XLA trace delta
@@ -30,18 +33,54 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
     (max/mean `active_ticks` vs the padded `n_ticks`, plus the arrival
     phase's sorts-per-tick). `early_exit=False` (--no-early-exit) times
     the flat scan instead; `flat_baseline=True` (--flat-baseline) runs
-    BOTH and records the measured speedup. The run store merge-appends it
-    all into `BENCH_sweep.json` and the run ends with a per-scenario
-    summary table plus the total `engine.trace_count()`."""
+    BOTH and records the measured speedup. `kernel_impl` forces the
+    switch-decision path (sets REPRO_KERNEL for the run, see
+    `kernels.bfc_step.ops`); `kernel_baseline=True` (--kernel-baseline)
+    runs each scenario on BOTH the lax path and the kernel path
+    (interpret on CPU, pallas on TPU via 'auto') and records per-path
+    per-active-tick wall time under the `kernel_impl` column. The run
+    store merge-appends it all into `BENCH_sweep.json` and the run ends
+    with a per-scenario summary table plus the total
+    `engine.trace_count()`."""
+    import contextlib
+    import os
     import tempfile
 
     import jax
     import numpy as np
 
     from .common import emit, emit_fct_table, run_scenario
+    from repro.kernels.bfc_step import ops as kernel_ops
     from repro.sim import engine, phases, scenarios
     from repro.sim import exec as exec_
     from repro.sim.exec import dispatch
+
+    @contextlib.contextmanager
+    def forced_impl(impl: str):
+        """Route every lane through one decision path for the duration
+        (REPRO_KERNEL overrides ProtoConfig.kernel_impl in resolve_impl)."""
+        prev = os.environ.get(kernel_ops.ENV_IMPL)
+        if impl:
+            os.environ[kernel_ops.ENV_IMPL] = impl
+        try:
+            yield
+        finally:
+            if impl:
+                if prev is None:
+                    os.environ.pop(kernel_ops.ENV_IMPL, None)
+                else:
+                    os.environ[kernel_ops.ENV_IMPL] = prev
+
+    def timing_since(tmark: int) -> dict:
+        """Aggregate dispatch.TIMING_LOG entries appended since `tmark`."""
+        entries = dispatch.TIMING_LOG[tmark:]
+        if not entries:
+            return {}
+        wall = sum(e["wall_s"] for e in entries)
+        active = sum(e["active_ticks_total"] for e in entries)
+        return {"wall_s": round(wall, 3),
+                "active_ticks_total": int(active),
+                "tick_wall_us": round(wall * 1e6 / max(active, 1), 3)}
 
     # records-only runs root the store in a scratch dir: rooting at "."
     # would reattach any stale manifest.json lying in the cwd
@@ -54,9 +93,13 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
         t0 = time.time()
         before = engine.trace_count()
         mark = len(dispatch.ACTIVE_LOG)
-        results = run_scenario(name, store=store if spool_dir else None,
-                               early_exit=early_exit, **overrides)
+        tmark = len(dispatch.TIMING_LOG)
+        with forced_impl(kernel_impl):
+            results = run_scenario(name, store=store if spool_dir else None,
+                                   early_exit=early_exit, **overrides)
         wall = time.time() - t0
+        primary_impl = kernel_impl or "lax"
+        kernel_timing = {primary_impl: timing_since(tmark)}
         compiles = engine.trace_count() - before
         grid_points += len(results)
         for r in results:
@@ -80,6 +123,19 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
             extras["flat_wall_s"] = round(flat_wall, 3)
             extras["speedup_vs_flat"] = round(flat_wall / max(wall, 1e-9),
                                               2)
+        if kernel_baseline:
+            # second pass on the other decision path: interpret-mode
+            # kernel on CPU (the CI path), real pallas on TPU
+            alt = ("pallas" if jax.devices()[0].platform == "tpu"
+                   else "interpret")
+            if alt != primary_impl:
+                tmark2 = len(dispatch.TIMING_LOG)
+                print(f"# --- {name} kernel_impl={alt} pass ---",
+                      flush=True)
+                with forced_impl(alt):
+                    run_scenario(name, early_exit=early_exit, **overrides)
+                kernel_timing[alt] = timing_since(tmark2)
+        extras["kernel_impl"] = kernel_timing
         rec = store.record_scenario(
             name, wall_s=wall, grid_points=len(results),
             xla_compilations=compiles,
@@ -101,6 +157,10 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
         if "speedup_vs_flat" in extras:
             emit(f"scenario_{name}", "speedup_vs_flat",
                  extras["speedup_vs_flat"])
+        for impl, tm in kernel_timing.items():
+            if tm:
+                emit(f"scenario_{name}", f"tick_wall_us_{impl}",
+                     tm["tick_wall_us"])
     emit("scenarios", "grid_points_total", grid_points)
     emit("scenarios", "xla_compilations", engine.trace_count())
     emit("scenarios", "sorts_per_tick", phases.SORTS_PER_TICK)
@@ -141,6 +201,16 @@ def main() -> None:
                     help="additionally time each scenario on the flat "
                          "runner and record speedup_vs_flat in "
                          "BENCH_sweep.json")
+    ap.add_argument("--kernel-impl", default="",
+                    choices=["", "lax", "pallas", "interpret", "auto"],
+                    help="force the switch-decision path for --scenario "
+                         "runs (sets REPRO_KERNEL; see "
+                         "docs/ARCHITECTURE.md 'Kernelized switch step')")
+    ap.add_argument("--kernel-baseline", action="store_true",
+                    help="run each scenario on both the lax and kernel "
+                         "decision paths and record per-active-tick wall "
+                         "time per path in BENCH_sweep.json's kernel_impl "
+                         "column")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -158,7 +228,9 @@ def main() -> None:
         run_scenarios(args.scenario, bench_json=args.bench_json,
                       spool_dir=args.spool_dir,
                       early_exit=not args.no_early_exit,
-                      flat_baseline=args.flat_baseline, **overrides)
+                      flat_baseline=args.flat_baseline,
+                      kernel_impl=args.kernel_impl,
+                      kernel_baseline=args.kernel_baseline, **overrides)
         return
 
     from . import paper_figs, micro

@@ -19,7 +19,10 @@ every grid point bit-for-bit against its own serial `engine.run` (each
 latency compiled alone). A third pass pushes a drain-heavy mini-grid
 through the segmented active-horizon runner and asserts it compiles once,
 actually early-exits (`active_ticks < n_ticks`), and matches the flat
-scan bit-for-bit. It is the cheap canary scripts/ci.sh runs on every
+scan bit-for-bit. A fourth pass re-runs the grid on the kernelized switch
+path (`kernel_impl="interpret"`, the fused Pallas step body on CPU) and
+asserts one deliberate extra compilation and bit-identity to the lax
+decision path. It is the cheap canary scripts/ci.sh runs on every
 tier-1 invocation; the full bit-identity matrix lives in
 tests/test_sim_topo_sweep.py, tests/test_sim_exec.py, and
 tests/test_sim_active_horizon.py."""
@@ -121,7 +124,8 @@ def main() -> None:
         chunk_width=2)
     assert ch_plan.n_chunks == 2, ch_plan.describe()
     before = engine.trace_count()
-    _, ch_emits = sweep.run_batch(topos, flowsets, cfg0, 512, plan=ch_plan)
+    st_lax, ch_emits = sweep.run_batch(topos, flowsets, cfg0, 512,
+                                       plan=ch_plan)
     ch_traces = engine.trace_count() - before
     if ch_traces > 1:
         print(f"TRACE GUARD FAILED: chunked exec plan "
@@ -168,6 +172,36 @@ def main() -> None:
               "reconstruction or the quiescence predicate is wrong.")
         sys.exit(1)
 
+    # 4) kernelized switch path: the same mixed-latency grid with
+    # `kernel_impl="interpret"` (the Pallas fused-step body on CPU) must
+    # compile ONCE — a deliberate second program keyed on the resolved
+    # impl, never one per lane — and stay bit-identical to the lax path
+    # in both emits and every state leaf
+    kcfg = dataclasses.replace(
+        cfg0, proto=dataclasses.replace(cfg0.proto,
+                                        kernel_impl="interpret"))
+    before = engine.trace_count()
+    st_k, em_k = sweep.run_batch(topos, flowsets, kcfg, 512)
+    k_traces = engine.trace_count() - before
+    if k_traces != 1:
+        print(f"TRACE GUARD FAILED: the kernel-path grid compiled "
+              f"{k_traces}x (expected exactly 1): kernel_impl is not "
+              "resolving into the compile-cache key (engine.static_cfg) "
+              "or the fused kernel retraces per lane.")
+        sys.exit(1)
+    if not np.array_equal(em_k, ch_emits):
+        print("TRACE GUARD FAILED: kernel-path emits diverge from the "
+              "lax decision path — the fused Pallas step is not "
+              "bit-identical to the inline phase pipeline.")
+        sys.exit(1)
+    bad = [n for n in st_k._fields
+           if not np.array_equal(np.asarray(getattr(st_k, n)),
+                                 np.asarray(getattr(st_lax, n)))]
+    if bad:
+        print(f"TRACE GUARD FAILED: kernel-path state leaves {bad} "
+              "diverge from the lax decision path.")
+        sys.exit(1)
+
     print(f"trace guard ok: {len(cases)} grid points "
           f"(2 topologies x 2 link latencies x 2 seeds, bit-identical to "
           f"serial) on {plan.n_devices} device(s), "
@@ -176,7 +210,8 @@ def main() -> None:
           f"{ch_plan.n_devices} dev) added {ch_traces} trace(s); "
           f"active-horizon drain grid: 1 trace, early exit at "
           f"{int(active.max())}/{drain_ticks} ticks, bit-identical to "
-          f"flat scan")
+          f"flat scan; kernel-path grid: {k_traces} trace, bit-identical "
+          f"to lax")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,14 @@ class ProtoConfig:
     pfc: bool = False
     window_init: float = 100.0      # pkts; flows start at line rate (1 BDP)
     infinite_buffer: bool = False
+    # Switch-decision implementation: 'lax' (inline phase pipeline),
+    # 'pallas' (compiled TPU kernel), 'interpret' (Pallas kernel body on
+    # any backend — the CI path), or 'auto' (TPU -> pallas, else interpret
+    # under REPRO_KERNEL_INTERPRET=1, else lax). The REPRO_KERNEL env var
+    # overrides; `engine.static_cfg` resolves to a concrete value so the
+    # compile cache is keyed on the path actually taken. See
+    # docs/ARCHITECTURE.md "Kernelized switch step".
+    kernel_impl: str = "lax"
     # DCTCP / DCQCN / HPCC constants (ticks / packets)
     dctcp_g: float = 1.0 / 16
     ecn_kmin: int = 100             # pkts (100 KB)

@@ -42,6 +42,7 @@ import numpy as np
 
 from ..core import bloom
 from ..core.flow_table import FlowTableParams, buckets_of
+from ..kernels.bfc_step import ops as kernel_ops
 from . import phases
 from .config import SimConfig
 from .phases import BIG, I32  # noqa: F401  (re-export for callers/tests)
@@ -248,8 +249,15 @@ def trace_count() -> int:
 def static_cfg(cfg: SimConfig) -> SimConfig:
     """The compile-cache view of a SimConfig: `clos` stripped, because the
     topology is a traced operand — fabrics that differ only in ClosParams
-    (and agree on `TopoDims`) share one executable."""
-    return replace(cfg, clos=None)
+    (and agree on `TopoDims`) share one executable — and
+    `proto.kernel_impl` resolved to the concrete switch-decision path
+    ('lax' | 'pallas' | 'interpret': REPRO_KERNEL env override applied,
+    'auto' resolved per `kernels.bfc_step.ops`), so the cache is keyed on
+    the program actually built."""
+    impl = kernel_ops.resolve_impl(cfg.proto.kernel_impl, lax_name="lax")
+    proto = (cfg.proto if impl == cfg.proto.kernel_impl
+             else replace(cfg.proto, kernel_impl=impl))
+    return replace(cfg, clos=None, proto=proto)
 
 
 def quiescent(st: SimState, ops: FlowOperands) -> jnp.ndarray:

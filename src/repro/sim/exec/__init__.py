@@ -21,7 +21,7 @@ fast* it runs:
 `execute()`; see docs/ARCHITECTURE.md ("The execution layer").
 """
 from .dispatch import (execute, lane_sharding,  # noqa: F401
-                       last_active_ticks, last_plan)
+                       last_active_ticks, last_plan, last_timing)
 from .planner import (DEFAULT_MEM_FRACTION, ENV_BUDGET, ExecPlan,  # noqa: F401
                       auto_budget_bytes, device_free_bytes,
                       host_available_bytes, plan)

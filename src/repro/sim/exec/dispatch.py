@@ -21,8 +21,9 @@ program; padded lanes are dropped at landing.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -48,6 +49,18 @@ LAST_ACTIVE: Optional[np.ndarray] = None
 ACTIVE_LOG: List[Tuple[str, np.ndarray]] = []
 ACTIVE_LOG_MAX = 4096
 
+# Wall-clock accounting of the most recent `execute` call, keyed by the
+# resolved `ProtoConfig.kernel_impl` so lax-vs-kernel benchmark runs can
+# report per-tick cost per decision path (`benchmarks.run --kernel-baseline`
+# writes these into BENCH_sweep.json's `kernel_impl` column). `wall_s`
+# covers dispatch through landing (compile included on the first call for
+# a config — take a warmup run first when isolating steady-state cost);
+# `tick_wall_us` divides by the total ACTIVE ticks actually simulated, so
+# quiescence early exit does not flatter either path. `TIMING_LOG` mirrors
+# `ACTIVE_LOG` (same bound, same take-a-mark-then-slice reader protocol).
+LAST_TIMING: Optional[Dict] = None
+TIMING_LOG: List[Dict] = []
+
 
 def last_plan() -> Optional[ExecPlan]:
     return LAST_PLAN
@@ -55,6 +68,10 @@ def last_plan() -> Optional[ExecPlan]:
 
 def last_active_ticks() -> Optional[np.ndarray]:
     return LAST_ACTIVE
+
+
+def last_timing() -> Optional[Dict]:
+    return LAST_TIMING
 
 
 def lane_sharding(devices: Sequence) -> NamedSharding:
@@ -92,7 +109,7 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
     spooled and returns None — the streaming mode for grids whose merged
     result would not fit on host (reassemble lazily via
     `store.load_tag(tag)`)."""
-    global LAST_PLAN, LAST_ACTIVE
+    global LAST_PLAN, LAST_ACTIVE, LAST_TIMING
     LAST_PLAN = plan
     if not collect and store is None:
         raise ValueError("collect=False discards results: pass a store")
@@ -145,16 +162,31 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
         if collect:
             chunks.append((st, emits))
 
+    t0 = time.perf_counter()
     for idx, lo in enumerate(range(0, K, W)):
         inflight.append((idx, dispatch(lo)))
         if len(inflight) >= max(1, plan.pipeline_depth):
             land_oldest()
     while inflight:
         land_oldest()
+    wall_s = time.perf_counter() - t0
 
     LAST_ACTIVE = np.concatenate(actives) if actives else np.zeros(0, np.int32)
     ACTIVE_LOG.append((tag, LAST_ACTIVE))
     del ACTIVE_LOG[:-ACTIVE_LOG_MAX]      # bound a long-lived process
+
+    active_total = int(LAST_ACTIVE.sum())
+    LAST_TIMING = {
+        "tag": tag,
+        "kernel_impl": engine.static_cfg(cfg).proto.kernel_impl,
+        "wall_s": wall_s,
+        "lanes": K,
+        "n_ticks": plan.n_ticks,
+        "active_ticks_total": active_total,
+        "tick_wall_us": wall_s * 1e6 / max(active_total, 1),
+    }
+    TIMING_LOG.append(LAST_TIMING)
+    del TIMING_LOG[:-ACTIVE_LOG_MAX]
 
     if not collect:
         return None

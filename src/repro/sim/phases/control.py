@@ -5,7 +5,11 @@ resume ring (the paper's buffer optimization; disabled by the
 `resume_limit=False` ablation), clears its pause bit, decrements the
 upstream counting Bloom filter, and rotates the filter pipeline
 counts -> in-flight snapshot -> applied snapshot every tau (modeling pause
-frame propagation delay)."""
+frame propagation delay).
+
+The resume gate compares occupancy against `ctx.th` — on the kernelized
+switch path (`ProtoConfig.kernel_impl`) that threshold comes from the
+fused Pallas step `derive` ran, bit-identical to the inline lax ceil."""
 from __future__ import annotations
 
 import jax.numpy as jnp

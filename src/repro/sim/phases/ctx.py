@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core import bloom
+from ...kernels.bfc_step import ops as kernel_ops
 from ..config import SimConfig
 from ..topology import MAX_HOPS, TopoDims
 
@@ -99,6 +100,10 @@ class StepCtx(NamedTuple):
     th: Optional[jnp.ndarray] = None           # (P,) dynamic pause threshold
     pfc_paused: Optional[jnp.ndarray] = None   # (P,)
     rem_src: Optional[jnp.ndarray] = None      # (F,) incl. this tick's work
+    # kernelized switch decision (None on the lax path; see `derive`):
+    ksel_q: Optional[jnp.ndarray] = None       # (P,) DRR/SRF pick, -1 = none
+    kcan_tx: Optional[jnp.ndarray] = None      # (P,) pick exists
+    kocc_after: Optional[jnp.ndarray] = None   # (P, Q) post-tx occupancy
     # -- phase 1 (control) ---------------------------------------------------
     bloom_counts: Optional[jnp.ndarray] = None
     bloom_mid: Optional[jnp.ndarray] = None
@@ -319,6 +324,26 @@ def derive(env: PhaseEnv, st, ops, topo) -> StepCtx:
     newly = ops.arrival == t
     rem_src = st.rem_src + jnp.where(newly, ops.size, 0)
 
+    # kernelized switch step (ProtoConfig.kernel_impl != 'lax'): ONE fused
+    # Pallas call computes the pause threshold, the DRR/SRF pick, and the
+    # post-tx occupancy for every port; `switch_tx` consumes the stashed
+    # decision instead of recomputing it in lax. The decision inputs (occ,
+    # qpaused, qptr/qsrf, pfc_paused, port_is_nic) are all fixed by the
+    # time `derive` ends — `control` mutates none of them — so computing
+    # the pick here is equivalent to computing it in switch_tx.
+    # `engine.static_cfg` resolved kernel_impl to a concrete
+    # 'pallas'/'interpret' before this program was traced.
+    ksel = kcan = kocc = None
+    if pc.kernel_impl != "lax":
+        blocked = pfc_paused | topo.port_is_nic
+        srf_key = (jnp.minimum(st.qsrf, BIG) if pc.scheduler == "srf"
+                   else None)
+        _, th, _, ksel, kcan, kocc = kernel_ops.fused(
+            occ, qpaused, st.qptr, blocked, srf_key=srf_key,
+            pause_window=tm.pause_window, scheduler=pc.scheduler,
+            impl=pc.kernel_impl)
+
     return StepCtx(t=t, occ=occ, port_occ=port_occ, sw_occ=sw_occ,
                    qpaused=qpaused, th=th, pfc_paused=pfc_paused,
-                   rem_src=rem_src)
+                   rem_src=rem_src, ksel_q=ksel, kcan_tx=kcan,
+                   kocc_after=kocc)

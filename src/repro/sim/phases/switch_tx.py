@@ -22,16 +22,25 @@ def switch_tx(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
     q_ar = jnp.arange(Q)
 
     occ, f_paused = ctx.occ, ctx.f_paused
-    eligible = (occ > 0) & ~ctx.qpaused & ~ctx.pfc_paused[:, None] \
-        & ~topo.port_is_nic[:, None]
-    if pc.scheduler == "srf":
-        key = jnp.minimum(st.qsrf, BIG)
+    if ctx.kcan_tx is not None:
+        # kernelized decision path (ProtoConfig.kernel_impl): `derive` ran
+        # the fused Pallas step; reuse its pick. The kernel reports "no
+        # eligible queue" as sel -1 where this path's packed argmin
+        # degenerates to queue 0 — normalize so every downstream
+        # gather/scatter is bit-identical to the lax pick.
+        can_tx = ctx.kcan_tx
+        sel_q = jnp.where(can_tx, ctx.ksel_q, 0)
     else:
-        key = (q_ar[None, :] - st.qptr[:, None]) % Q
-    key = jnp.where(eligible, key, BIG + 1)
-    packed = key * Q + q_ar[None, :]                   # fits int32
-    sel_q = (jnp.min(packed, axis=1) % Q).astype(I32)
-    can_tx = eligible[p_ar, sel_q]
+        eligible = (occ > 0) & ~ctx.qpaused & ~ctx.pfc_paused[:, None] \
+            & ~topo.port_is_nic[:, None]
+        if pc.scheduler == "srf":
+            key = jnp.minimum(st.qsrf, BIG)
+        else:
+            key = (q_ar[None, :] - st.qptr[:, None]) % Q
+        key = jnp.where(eligible, key, BIG + 1)
+        packed = key * Q + q_ar[None, :]               # fits int32
+        sel_q = (jnp.min(packed, axis=1) % Q).astype(I32)
+        can_tx = eligible[p_ar, sel_q]
     tx_entry = jnp.where(
         can_tx, st.qbuf[p_ar, sel_q, st.qhead[p_ar, sel_q] % CAP], -1)
     tx_f = jnp.maximum(tx_entry >> 1, 0)
@@ -68,8 +77,10 @@ def switch_tx(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
     bucket_cnt = st.bucket_cnt.at[
         jnp.maximum(topo.port_switch, 0), ops.fbucket[tx_f]].add(
         -departed.astype(I32))
-    # reset SRF key when queue empties
-    occ_after = occ.at[p_ar, sel_q].add(-can_tx.astype(I32))
+    # reset SRF key when queue empties (occupancy update comes from the
+    # fused kernel when it ran — identical math, already materialized)
+    occ_after = (ctx.kocc_after if ctx.kocc_after is not None
+                 else occ.at[p_ar, sel_q].add(-can_tx.astype(I32)))
     qsrf = jnp.where(
         (occ_after == 0) & (q_ar[None, :] == sel_q[:, None])
         & can_tx[:, None],

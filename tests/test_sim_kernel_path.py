@@ -1,0 +1,141 @@
+"""Kernelized switch path: `ProtoConfig.kernel_impl="interpret"` (the
+fused Pallas step body on CPU) must be bit-identical to the inline lax
+phase pipeline — emits and every SimState leaf — across all six protocol
+families, plus the SRF scheduler variant. Also pins the impl-resolution
+contract (`kernels.bfc_step.ops.resolve_impl`): the REPRO_KERNEL /
+REPRO_KERNEL_INTERPRET env overrides, 'auto' fallbacks, and
+`engine.static_cfg` folding the resolved impl into the compile-cache
+key."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bfc_step import ops as kernel_ops
+from repro.kernels.bfc_step import ref as kernel_ref
+from repro.sim import engine, topology, workload
+from repro.sim.config import (BFC, BFC_DEST, BFC_SRF, DCQCN, DCTCP, HPCC,
+                              IDEAL_FQ, SimConfig)
+from repro.sim.topology import ClosParams
+
+CLOS = ClosParams(n_servers=8, n_tor=2, n_spine=2, switch_buffer_pkts=512)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    topo = topology.build(CLOS)
+    wp = workload.WorkloadParams(workload="uniform", load=0.5, seed=5)
+    return topo, workload.generate(topo, wp, n_flows=24)
+
+
+def _assert_states_equal(a, b, label):
+    for name in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, name)),
+                              np.asarray(getattr(b, name))), \
+            f"{label}: SimState.{name}"
+
+
+@pytest.mark.parametrize("proto", [BFC, BFC_SRF, BFC_DEST, DCTCP, DCQCN,
+                                   HPCC, IDEAL_FQ],
+                         ids=lambda p: p.name)
+def test_kernel_path_bit_identical_to_lax(tiny, proto):
+    """The acceptance property: routing the per-tick switch decision
+    through the fused Pallas kernel changes NOTHING observable — same
+    emits, same final state, for every protocol family (drr and srf
+    schedulers, flow- and dest-keyed queues, every cc loop)."""
+    topo, flows = tiny
+    n_ticks = int(flows.horizon + 600)
+    cfg_lax = SimConfig(proto=proto, clos=CLOS)
+    cfg_k = SimConfig(proto=dataclasses.replace(proto,
+                                                kernel_impl="interpret"),
+                      clos=CLOS)
+    st_l, em_l = engine.run(topo, flows, cfg_lax, n_ticks)
+    st_k, em_k = engine.run(topo, flows, cfg_k, n_ticks)
+    assert np.array_equal(em_l, em_k), proto.name
+    _assert_states_equal(st_l, st_k, proto.name)
+
+
+# ---- impl resolution --------------------------------------------------------
+
+
+def _clear_env(monkeypatch):
+    monkeypatch.delenv(kernel_ops.ENV_IMPL, raising=False)
+    monkeypatch.delenv(kernel_ops.ENV_INTERPRET, raising=False)
+
+
+def test_resolve_impl_defaults(monkeypatch):
+    _clear_env(monkeypatch)
+    on_tpu = jax.default_backend() == "tpu"
+    want_auto = "pallas" if on_tpu else "lax"
+    assert kernel_ops.resolve_impl("auto", lax_name="lax") == want_auto
+    assert kernel_ops.resolve_impl("lax", lax_name="lax") == "lax"
+    assert kernel_ops.resolve_impl("ref") == "ref"       # normalizes
+    assert kernel_ops.resolve_impl("lax") == "ref"       # to lax_name
+    assert kernel_ops.resolve_impl("interpret") == "interpret"
+    with pytest.raises(ValueError):
+        kernel_ops.resolve_impl("cuda")
+
+
+def test_resolve_impl_env_overrides(monkeypatch):
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(kernel_ops.ENV_IMPL, "interpret")
+    assert kernel_ops.resolve_impl("lax") == "interpret"
+    assert kernel_ops.resolve_impl("auto") == "interpret"
+    monkeypatch.setenv(kernel_ops.ENV_IMPL, "auto")      # "no override"
+    assert kernel_ops.resolve_impl("lax", lax_name="lax") == "lax"
+    monkeypatch.setenv(kernel_ops.ENV_IMPL, "bogus")
+    with pytest.raises(ValueError):
+        kernel_ops.resolve_impl("lax")
+
+
+def test_resolve_impl_interpret_toggle(monkeypatch):
+    """REPRO_KERNEL_INTERPRET=1 makes 'auto' exercise the kernel body off
+    TPU — the CI toggle the old dispatcher lacked (auto always fell back
+    to ref on CPU, so the Pallas path was dead code in every test run)."""
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(kernel_ops.ENV_INTERPRET, "1")
+    if jax.default_backend() == "tpu":
+        assert kernel_ops.resolve_impl("auto") == "pallas"
+    else:
+        assert kernel_ops.resolve_impl("auto") == "interpret"
+
+
+def test_static_cfg_resolves_kernel_impl(monkeypatch):
+    """engine.static_cfg folds the *resolved* impl into the config that
+    keys the compile cache, so REPRO_KERNEL=interpret and an explicit
+    kernel_impl='interpret' share one compiled program (and a stale env
+    can never alias two different decision paths under one key)."""
+    _clear_env(monkeypatch)
+    cfg = SimConfig(proto=BFC, clos=CLOS)
+    assert engine.static_cfg(cfg).proto.kernel_impl == "lax"
+    monkeypatch.setenv(kernel_ops.ENV_IMPL, "interpret")
+    assert engine.static_cfg(cfg).proto.kernel_impl == "interpret"
+    cfg_auto = SimConfig(proto=dataclasses.replace(BFC, kernel_impl="auto"),
+                         clos=CLOS)
+    assert engine.static_cfg(cfg_auto).proto.kernel_impl == "interpret"
+    _clear_env(monkeypatch)
+    if jax.default_backend() != "tpu":
+        assert engine.static_cfg(cfg_auto).proto.kernel_impl == "lax"
+
+
+def test_decide_auto_runs_interpret_under_toggle(monkeypatch):
+    """The satellite-2 regression: `ops.decide(impl='auto')` off-TPU used
+    to silently resolve to the jnp oracle, so CI never executed the kernel
+    body. Under the toggle it must take the interpret path and agree with
+    the oracle bit-for-bit."""
+    _clear_env(monkeypatch)
+    ks = jax.random.split(jax.random.key(2), 3)
+    occ = jax.random.randint(ks[0], (64, 8), 0, 40)
+    qpaused = jax.random.bernoulli(ks[1], 0.3, (64, 8))
+    ptr = jax.random.randint(ks[2], (64,), 0, 8)
+    want = kernel_ref.bfc_decide_ref(occ, qpaused, ptr, pause_window=37)
+    monkeypatch.setenv(kernel_ops.ENV_INTERPRET, "1")
+    assert kernel_ops.resolve_impl("auto") in ("interpret", "pallas")
+    got = kernel_ops.decide(occ, qpaused, ptr, pause_window=37)
+    for w, g, nm in zip(want, got, ("nact", "th", "pause", "sel")):
+        assert bool(jnp.all(w == g)), nm
