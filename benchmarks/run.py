@@ -11,8 +11,9 @@ reporting ``active_ticks``/``n_ticks`` from the quiescence early exit.
 and records the speedup; ``--kernel-impl``/``--kernel-baseline`` pick (or
 A/B) the switch-decision path and record per-path per-tick wall time;
 ``--long-lived-pkts`` shrinks the probe flow so smoke-scale
-``table1_long_lived`` can drain; ``--list-scenarios`` shows the
-registry."""
+``table1_long_lived`` can drain; ``--trace`` captures every per-tick
+trace channel and spools them for ``python -m repro.sim.replay``;
+``--list-scenarios`` shows the registry."""
 from __future__ import annotations
 
 import argparse
@@ -24,7 +25,8 @@ import traceback
 def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
                   spool_dir: str = "", early_exit: bool = True,
                   flat_baseline: bool = False, kernel_impl: str = "",
-                  kernel_baseline: bool = False, **overrides) -> None:
+                  kernel_baseline: bool = False, trace: bool = False,
+                  **overrides) -> None:
     """Nightly mode: run registry scenarios through the exec-planned
     batched sweep and record the perf trajectory — each scenario reports
     its grid size, wall time, lanes/sec, device count, XLA trace delta
@@ -38,10 +40,14 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
     `kernels.bfc_step.ops`); `kernel_baseline=True` (--kernel-baseline)
     runs each scenario on BOTH the lax path and the kernel path
     (interpret on CPU, pallas on TPU via 'auto') and records per-path
-    per-active-tick wall time under the `kernel_impl` column. The run
-    store merge-appends it all into `BENCH_sweep.json` and the run ends
-    with a per-scenario summary table plus the total
-    `engine.trace_count()`."""
+    per-active-tick wall time under the `kernel_impl` column — which is
+    recorded for EVERY scenario run (keyed by the RESOLVED decision path
+    each execute call reported, not the flag), so single-path runs get
+    the column too. `trace=True` (--trace) runs every case with
+    `TraceSpec.full()` and spools the per-tick channels through the run
+    store for `python -m repro.sim.replay`. The run store merge-appends
+    it all into `BENCH_sweep.json` and the run ends with a per-scenario
+    summary table plus the total `engine.trace_count()`."""
     import contextlib
     import os
     import tempfile
@@ -72,34 +78,48 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
                     os.environ[kernel_ops.ENV_IMPL] = prev
 
     def timing_since(tmark: int) -> dict:
-        """Aggregate dispatch.TIMING_LOG entries appended since `tmark`."""
-        entries = dispatch.TIMING_LOG[tmark:]
-        if not entries:
-            return {}
-        wall = sum(e["wall_s"] for e in entries)
-        active = sum(e["active_ticks_total"] for e in entries)
-        return {"wall_s": round(wall, 3),
-                "active_ticks_total": int(active),
-                "tick_wall_us": round(wall * 1e6 / max(active, 1), 3)}
+        """Aggregate dispatch.TIMING_LOG entries appended since `tmark`,
+        grouped by the RESOLVED `kernel_impl` each execute call recorded —
+        so every scenario run gets a correct per-path column, regardless
+        of how the path was chosen (flag, REPRO_KERNEL, 'auto', or the
+        scenario's own ProtoConfig)."""
+        out: dict = {}
+        for e in dispatch.TIMING_LOG.since(tmark):
+            g = out.setdefault(e["kernel_impl"],
+                               {"wall_s": 0.0, "active_ticks_total": 0})
+            g["wall_s"] += e["wall_s"]
+            g["active_ticks_total"] += int(e["active_ticks_total"])
+        for g in out.values():
+            g["wall_s"] = round(g["wall_s"], 3)
+            g["tick_wall_us"] = round(
+                g["wall_s"] * 1e6 / max(g["active_ticks_total"], 1), 3)
+        return out
 
     # records-only runs root the store in a scratch dir: rooting at "."
     # would reattach any stale manifest.json lying in the cwd
     store = exec_.RunStore(spool_dir
                            or tempfile.mkdtemp(prefix="bench_store_"))
+    if trace:
+        from repro.sim.trace import TraceSpec
+        overrides["trace"] = TraceSpec.full()
+        print(f"# tracing {TraceSpec.full().describe()} -> {store.root} "
+              f"(replay: python -m repro.sim.replay list {store.root})",
+              flush=True)
+    # traced runs must spool through the store even when records-only
+    use_store = store if (spool_dir or trace) else None
     names = scenarios.names() if which == "all" else [which]
     grid_points = 0
     for name in names:
         print(f"# === scenario {name} ===", flush=True)
         t0 = time.time()
         before = engine.trace_count()
-        mark = len(dispatch.ACTIVE_LOG)
-        tmark = len(dispatch.TIMING_LOG)
+        mark = dispatch.ACTIVE_LOG.mark()
+        tmark = dispatch.TIMING_LOG.mark()
         with forced_impl(kernel_impl):
-            results = run_scenario(name, store=store if spool_dir else None,
+            results = run_scenario(name, store=use_store,
                                    early_exit=early_exit, **overrides)
         wall = time.time() - t0
-        primary_impl = kernel_impl or "lax"
-        kernel_timing = {primary_impl: timing_since(tmark)}
+        kernel_timing = timing_since(tmark)
         compiles = engine.trace_count() - before
         grid_points += len(results)
         for r in results:
@@ -107,9 +127,9 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
         plan = exec_.last_plan()
         # active-horizon profile, aggregated over every protocol group the
         # scenario dispatched (one ACTIVE_LOG entry per execute call)
-        active = (np.concatenate(
-            [a for _, a in dispatch.ACTIVE_LOG[mark:]])
-            if len(dispatch.ACTIVE_LOG) > mark else np.zeros(0, np.int32))
+        landed = dispatch.ACTIVE_LOG.since(mark)
+        active = (np.concatenate([a for _, a in landed])
+                  if landed else np.zeros(0, np.int32))
         n_ticks = plan.n_ticks if plan else 0
         extras = {}
         if active.size:
@@ -128,13 +148,13 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
             # kernel on CPU (the CI path), real pallas on TPU
             alt = ("pallas" if jax.devices()[0].platform == "tpu"
                    else "interpret")
-            if alt != primary_impl:
-                tmark2 = len(dispatch.TIMING_LOG)
+            if alt not in kernel_timing:
+                tmark2 = dispatch.TIMING_LOG.mark()
                 print(f"# --- {name} kernel_impl={alt} pass ---",
                       flush=True)
                 with forced_impl(alt):
                     run_scenario(name, early_exit=early_exit, **overrides)
-                kernel_timing[alt] = timing_since(tmark2)
+                kernel_timing.update(timing_since(tmark2))
         extras["kernel_impl"] = kernel_timing
         rec = store.record_scenario(
             name, wall_s=wall, grid_points=len(results),
@@ -211,6 +231,12 @@ def main() -> None:
                          "decision paths and record per-active-tick wall "
                          "time per path in BENCH_sweep.json's kernel_impl "
                          "column")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture every trace channel (TraceSpec.full()) "
+                         "for --scenario runs and spool the per-tick "
+                         "channels through the run store (inspect with "
+                         "python -m repro.sim.replay; use --spool-dir to "
+                         "choose the store root)")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -230,7 +256,8 @@ def main() -> None:
                       early_exit=not args.no_early_exit,
                       flat_baseline=args.flat_baseline,
                       kernel_impl=args.kernel_impl,
-                      kernel_baseline=args.kernel_baseline, **overrides)
+                      kernel_baseline=args.kernel_baseline,
+                      trace=args.trace, **overrides)
         return
 
     from . import paper_figs, micro

@@ -22,10 +22,18 @@ actually early-exits (`active_ticks < n_ticks`), and matches the flat
 scan bit-for-bit. A fourth pass re-runs the grid on the kernelized switch
 path (`kernel_impl="interpret"`, the fused Pallas step body on CPU) and
 asserts one deliberate extra compilation and bit-identity to the lax
-decision path. It is the cheap canary scripts/ci.sh runs on every
-tier-1 invocation; the full bit-identity matrix lives in
-tests/test_sim_topo_sweep.py, tests/test_sim_exec.py, and
-tests/test_sim_active_horizon.py."""
+decision path. A fifth pass guards the trace-capture layer: tracing OFF
+(the default spec) is a cache HIT on the very programs parts 1-4 built
+(zero new compiles, bit-identical emits), tracing ON compiles once per
+protocol, leaves the legacy emit columns and every state leaf untouched,
+spools channels through a RunStore that match a flat-scan traced
+reference bit-for-bit (the early-exit tail reconstruction under
+tracing), and `python -m repro.sim.replay diff` on two spooled protocol
+variants reports the correct first-divergence tick. It is the cheap
+canary scripts/ci.sh runs on every tier-1 invocation; the full
+bit-identity matrix lives in tests/test_sim_topo_sweep.py,
+tests/test_sim_exec.py, tests/test_sim_active_horizon.py, and
+tests/test_sim_trace.py."""
 import os
 import sys
 
@@ -202,6 +210,94 @@ def main() -> None:
               "diverge from the lax decision path.")
         sys.exit(1)
 
+    # 5) trace capture. (a) OFF is free: the default TraceSpec is part of
+    # the cache key parts 1-4 already exercised, so re-running the lax
+    # grid must be a pure cache hit with bit-identical emits — the
+    # capture layer costs literally nothing until enabled.
+    import subprocess
+    import tempfile
+
+    from repro.sim.config import DCQCN
+    from repro.sim.trace import TraceSpec, split_emits
+    from repro.sim.trace import layout as trace_layout
+
+    before = engine.trace_count()
+    _, em_off = sweep.run_batch(topos, flowsets, cfg0, 512)
+    off_traces = engine.trace_count() - before
+    if off_traces != 0 or not np.array_equal(em_off, ch_emits):
+        print(f"TRACE GUARD FAILED: the default (off) TraceSpec added "
+              f"{off_traces} compile(s) or changed emits — the off-spec "
+              "is no longer bit-identical zero-cost (SimConfig.trace "
+              "must build exactly the untraced program).")
+        sys.exit(1)
+
+    # (b) ON: one compile per protocol, legacy emits and state unchanged,
+    # and the spooled channels bit-identical to a flat-scan traced
+    # reference — the quiescent-tail trace reconstruction under early exit
+    tcfg = dataclasses.replace(cfg0, trace=TraceSpec.full())
+    spool_root = tempfile.mkdtemp(prefix="trace_guard_spool_")
+    store = exec_.RunStore(spool_root)
+    before = engine.trace_count()
+    st_t, em_t = sweep.run_batch(topos, flowsets, tcfg, drain_ticks,
+                                 store=store)
+    t_traces = engine.trace_count() - before
+    tr_seg, lay = exec_.last_trace()
+    if t_traces != 1:
+        print(f"TRACE GUARD FAILED: the traced grid compiled {t_traces}x "
+              "(expected exactly 1): TraceSpec is fragmenting the "
+              "compile cache.")
+        sys.exit(1)
+    if not np.array_equal(em_t, em_seg):
+        print("TRACE GUARD FAILED: tracing changed the legacy emit "
+              "columns — capture must only APPEND channels.")
+        sys.exit(1)
+    bad = [n for n in st_t._fields
+           if not np.array_equal(np.asarray(getattr(st_t, n)),
+                                 np.asarray(getattr(st_seg, n)))]
+    if bad:
+        print(f"TRACE GUARD FAILED: tracing changed state leaves {bad} — "
+              "capture must never change the simulation itself.")
+        sys.exit(1)
+    sweep.run_batch(topos, flowsets, tcfg, drain_ticks, early_exit=False)
+    tr_flat, _ = exec_.last_trace()
+    if not np.array_equal(tr_seg, tr_flat):
+        print("TRACE GUARD FAILED: early-exit traced channels diverge "
+              "from the flat-scan traced reference — the step-once "
+              "quiescent-tail trace row is wrong.")
+        sys.exit(1)
+    spooled, slay, _, _ = store.load_trace(cfg0.proto.name)
+    if slay.meta() != lay.meta() or not np.array_equal(spooled, tr_seg):
+        print("TRACE GUARD FAILED: spooled trace chunks do not round-trip "
+              "the landed channels (RunStore.load_trace).")
+        sys.exit(1)
+    legacy, chans = split_emits(
+        np.concatenate([em_t[:, :, :3], tr_seg], axis=2),
+        trace_layout(tcfg.trace, dims.n_ports, dims.n_switches))
+    assert np.array_equal(legacy, em_t) and np.array_equal(chans, tr_seg)
+
+    # (c) the replay CLI diffs two spooled protocol variants of the SAME
+    # lanes and reports the correct first-divergence tick
+    dcfg = dataclasses.replace(
+        cfg0, proto=DCQCN, trace=TraceSpec.full())
+    sweep.run_batch(topos, flowsets, dcfg, drain_ticks, store=store)
+    tr_d, _ = exec_.last_trace()
+    expect_tick = int(np.argmax((tr_seg[0] != tr_d[0]).any(axis=1)))
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + ([os.environ["PYTHONPATH"]]
+                      if os.environ.get("PYTHONPATH") else [])))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.sim.replay", "diff", spool_root,
+         cfg0.proto.name, "dcqcn", "--expect", "diverge"],
+        capture_output=True, text=True, env=env)
+    want = f"first divergence at tick {expect_tick}"
+    if proc.returncode != 0 or want not in proc.stdout:
+        print("TRACE GUARD FAILED: replay CLI diff did not report the "
+              f"expected divergence ({want!r}):\n--- stdout ---\n"
+              f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+        sys.exit(1)
+
     print(f"trace guard ok: {len(cases)} grid points "
           f"(2 topologies x 2 link latencies x 2 seeds, bit-identical to "
           f"serial) on {plan.n_devices} device(s), "
@@ -211,7 +307,10 @@ def main() -> None:
           f"active-horizon drain grid: 1 trace, early exit at "
           f"{int(active.max())}/{drain_ticks} ticks, bit-identical to "
           f"flat scan; kernel-path grid: {k_traces} trace, bit-identical "
-          f"to lax")
+          f"to lax; trace capture: off-spec {off_traces} extra traces, "
+          f"traced grid {t_traces} trace with {lay.width} channels "
+          f"bit-identical to flat + spool round-trip, replay diff at "
+          f"tick {expect_tick}")
 
 
 if __name__ == "__main__":

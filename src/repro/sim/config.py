@@ -11,6 +11,7 @@ from dataclasses import dataclass, replace
 from typing import Optional
 
 from .topology import ClosParams
+from .trace.spec import TraceSpec
 
 
 @dataclass(frozen=True)
@@ -108,3 +109,7 @@ class SimConfig:
     occ_bins: int = 64
     flows_bins: int = 65
     probe_flow: int = -1            # long-lived flow to trace throughput
+    # Opt-in per-tick channel capture (see sim/trace/). Part of the frozen
+    # config, so static_cfg / the compile cache key on it; the default
+    # all-off spec builds exactly the untraced program.
+    trace: TraceSpec = TraceSpec()

@@ -11,7 +11,9 @@ simulates an empty network. Instead of one flat `lax.scan(n_ticks)`, the
 compiled program runs a `lax.while_loop` over fixed-width tick segments
 (`DEFAULT_SEGMENT`, a static knob): after each segment a batch-wide
 `quiescent` predicate decides whether anything can still change, emits
-land in a preallocated (T, 3) buffer via dynamic slices, and the skipped
+land in a preallocated (T, 3 + trace channels) buffer via dynamic
+slices (`SimConfig.trace` selects the opt-in channels; off = width 3,
+see `sim/trace/`), and the skipped
 quiescent suffix is reconstructed in closed form (`_finish_tail`) — the
 final state and emits are bit-identical to the flat scan, which survives
 as the `early_exit=False` escape hatch for A/B runs. The runner returns
@@ -47,6 +49,8 @@ from . import phases
 from .config import SimConfig
 from .phases import BIG, I32  # noqa: F401  (re-export for callers/tests)
 from .topology import TopoDims, Topology, pack_topo
+from .trace import EMIT_BASE
+from .trace import layout as trace_layout
 
 # Arrival tick of padded "phantom" flows (sweep batching): beyond any
 # simulated horizon, so they never start, never transmit, never allocate.
@@ -288,7 +292,8 @@ def quiescent(st: SimState, ops: FlowOperands) -> jnp.ndarray:
     return flows_done & net_empty & signals_clear
 
 
-def _finish_tail(env, st: SimState, emits, topo_ops, n_ticks: int):
+def _finish_tail(env, st: SimState, emits, topo_ops, n_ticks: int,
+                 step=None, flow_ops=None):
     """Reconstruct ticks [st.t, n_ticks) of a quiescent network in closed
     form, bit-identical to running the flat scan over them.
 
@@ -299,7 +304,18 @@ def _finish_tail(env, st: SimState, emits, topo_ops, n_ticks: int):
     and the epoch-timer laws — replayed with zero feedback through the
     SAME `phases.cc_laws` the live feedback phase uses, so float op order
     is identical). Everything else is frozen by the `quiescent` predicate.
-    A no-op when st.t == n_ticks (no early exit)."""
+    A no-op when st.t == n_ticks (no early exit).
+
+    With tracing on the emit row is wider than `tail_emit_row`'s closed
+    form, so the constant row comes from evaluating `step` ONCE on the
+    quiescent state instead. Every captured channel is a fixed point of
+    quiescence — occupancies/pause bits zero, no flow can start (all real
+    arrivals precede st.t once their flow completed, phantoms never
+    arrive), completions/deliveries frozen, no port eligible to transmit
+    (sel -1 / can_tx false) — so the single evaluation yields exactly the
+    row the flat scan would emit at every tail tick. The off-spec path
+    never calls `step` here, keeping that program byte-identical to the
+    untraced build."""
     pc, tm, F = env.cfg.proto, env.cfg.timing, env.F
     zero_i = jnp.zeros((F,), I32)
     zero_f = jnp.zeros((F,), jnp.float32)
@@ -321,7 +337,10 @@ def _finish_tail(env, st: SimState, emits, topo_ops, n_ticks: int):
         (st.tx_ewma, st.tokens, phases.CCVars.of_state(st)))
 
     st = phases.tail_hist(env, st, topo_ops, n_ticks)
-    row = phases.tail_emit_row(env, st)
+    if env.cfg.trace.enabled:
+        _, row = step(st, flow_ops, topo_ops)
+    else:
+        row = phases.tail_emit_row(env, st)
     tail = jnp.arange(n_ticks, dtype=I32)[:, None] >= st.t
     emits = jnp.where(tail, row[None, :], emits)
     st = st._replace(
@@ -347,7 +366,7 @@ def compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
     `TopoOperands` with a leading batch axis and vmaps the whole simulation
     over both (still a single compilation for the entire grid; the
     segmented while-loop then runs until every lane is quiescent, masking
-    finished lanes). Returns `(state, emits[T, 3], active_ticks)` —
+    finished lanes). Returns `(state, emits[T, 3 + trace], active_ticks)` —
     `active_ticks` is the tick the run actually simulated to before the
     closed-form tail took over (= n_ticks when no early exit)."""
     return _compiled_runner(dims, static_cfg(cfg), n_flows, n_ticks,
@@ -360,6 +379,10 @@ def _compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
                      segment: int, early_exit: bool):
     init_state, step = make_step(dims, cfg, n_flows)
     env = phases.make_env(dims, cfg, n_flows)
+    # emit row width: 3 legacy columns + the opt-in trace channels
+    # (0 with the default off-spec, so the buffer shape is unchanged)
+    emit_w = EMIT_BASE + trace_layout(cfg.trace, dims.n_ports,
+                                      dims.n_switches).width
 
     def seg_scan(st, flow_ops, topo_ops, length):
         return jax.lax.scan(lambda s, _: step(s, flow_ops, topo_ops),
@@ -386,7 +409,7 @@ def _compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
             lambda c: (c[0].t < n_full * seg)
             & ~quiescent(c[0], flow_ops),
             lambda c: advance(c, seg),
-            (init_state(), jnp.zeros((n_ticks, 3), I32)))
+            (init_state(), jnp.zeros((n_ticks, emit_w), I32)))
         if rem:
             # horizon not a segment multiple: run the remainder unless the
             # loop already went quiescent (then the tail covers it)
@@ -394,7 +417,8 @@ def _compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
                 quiescent(st, flow_ops), lambda c: c,
                 lambda c: advance(c, rem), (st, emits))
         active = st.t
-        st, emits = _finish_tail(env, st, emits, topo_ops, n_ticks)
+        st, emits = _finish_tail(env, st, emits, topo_ops, n_ticks,
+                                 step=step, flow_ops=flow_ops)
         return st, emits, active
 
     one = one_flat if not early_exit or n_ticks == 0 else one_segmented
@@ -411,7 +435,9 @@ def _compiled_runner(dims: TopoDims, cfg: SimConfig, n_flows: int,
 def run(topo: Topology, flows, cfg: SimConfig, n_ticks: int,
         unroll: int = 1, segment: int = DEFAULT_SEGMENT,
         early_exit: bool = True):
-    """Run the simulation for `n_ticks`. Returns (final_state, emits[T,3]).
+    """Run the simulation for `n_ticks`. Returns (final_state, emits) with
+    emits of shape (T, 3 + trace channels) — the 3 legacy columns plus any
+    `cfg.trace` capture (see `trace.split_emits` to separate them).
 
     unroll: ticks inlined per scan iteration. Measured WORSE at 4 on CPU
     (§Perf R9) — the step is gather/scatter-bound, not dispatch-bound — so

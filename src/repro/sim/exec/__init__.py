@@ -14,14 +14,16 @@ fast* it runs:
 * `dispatch` — executes a plan: each chunk's lanes shard evenly across the
   devices via a batch-axis `NamedSharding` of the ONE cached executable,
   and chunks double-buffer so host readback overlaps device compute.
-* `store`    — spools landed chunks to disk incrementally and records the
-  perf trajectory as `BENCH_sweep.json`.
+* `store`    — spools landed chunks (and their opt-in trace blocks, see
+  `sim/trace/`) to disk incrementally and records the perf trajectory as
+  `BENCH_sweep.json`.
 
 `sweep.run_batch` / `run_grid` / `scenarios.run` route through `plan()` +
 `execute()`; see docs/ARCHITECTURE.md ("The execution layer").
 """
-from .dispatch import (execute, lane_sharding,  # noqa: F401
-                       last_active_ticks, last_plan, last_timing)
+from .dispatch import (BoundedLog, execute, lane_sharding,  # noqa: F401
+                       last_active_ticks, last_plan, last_timing,
+                       last_trace)
 from .planner import (DEFAULT_MEM_FRACTION, ENV_BUDGET, ExecPlan,  # noqa: F401
                       auto_budget_bytes, device_free_bytes,
                       host_available_bytes, plan)

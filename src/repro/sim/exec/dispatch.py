@@ -31,7 +31,39 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from .. import engine
 from ..engine import SimState
+from ..trace import TraceLayout, layout as trace_layout, split_emits
 from .planner import ExecPlan
+
+
+class BoundedLog(list):
+    """Append-only readback log bounded at `maxlen` entries: `append`
+    drops the oldest overflow so a long-lived process never grows one
+    without bound. Readers follow ONE take-a-mark-then-slice protocol
+    (shared by `ACTIVE_LOG`, `TIMING_LOG`, and `TRACE_LOG` — don't copy it
+    a fourth time): record ``mark = log.mark()`` before dispatching and
+    slice ``log.since(mark)`` promptly after. Marks are *absolute*
+    positions (total appends since process start), so a slow reader whose
+    window was partially trimmed gets the surviving suffix rather than a
+    misaligned slice."""
+
+    def __init__(self, maxlen: int):
+        super().__init__()
+        self.maxlen = int(maxlen)
+        self._dropped = 0        # entries trimmed away since process start
+
+    def append(self, item) -> None:
+        super().append(item)
+        overflow = len(self) - self.maxlen
+        if overflow > 0:
+            del self[:overflow]
+            self._dropped += overflow
+
+    def mark(self) -> int:
+        return self._dropped + len(self)
+
+    def since(self, mark: int) -> list:
+        return list(self[max(0, mark - self._dropped):])
+
 
 # The most recent plan `execute` ran — introspection hook for examples,
 # benchmarks, and trace_guard (what did the planner decide?).
@@ -42,24 +74,31 @@ LAST_PLAN: Optional[ExecPlan] = None
 # exit reconstructed the rest in closed form; == plan.n_ticks when a lane
 # never went quiescent or early exit was off). `ACTIVE_LOG` accumulates
 # one (tag, actives) entry per execute call so multi-group drivers
-# (run_grid, benchmarks) can aggregate across protocol variants; execute
-# drops the oldest entries beyond `ACTIVE_LOG_MAX`, so readers must take
-# a length mark before dispatching and slice from it promptly.
+# (run_grid, benchmarks) can aggregate across protocol variants; see
+# `BoundedLog` for the bound and the reader protocol.
 LAST_ACTIVE: Optional[np.ndarray] = None
-ACTIVE_LOG: List[Tuple[str, np.ndarray]] = []
 ACTIVE_LOG_MAX = 4096
+ACTIVE_LOG: BoundedLog = BoundedLog(ACTIVE_LOG_MAX)
 
 # Wall-clock accounting of the most recent `execute` call, keyed by the
 # resolved `ProtoConfig.kernel_impl` so lax-vs-kernel benchmark runs can
-# report per-tick cost per decision path (`benchmarks.run --kernel-baseline`
-# writes these into BENCH_sweep.json's `kernel_impl` column). `wall_s`
+# report per-tick cost per decision path (`benchmarks.run` writes these
+# into BENCH_sweep.json's `kernel_impl` column). `wall_s`
 # covers dispatch through landing (compile included on the first call for
 # a config — take a warmup run first when isolating steady-state cost);
 # `tick_wall_us` divides by the total ACTIVE ticks actually simulated, so
-# quiescence early exit does not flatter either path. `TIMING_LOG` mirrors
-# `ACTIVE_LOG` (same bound, same take-a-mark-then-slice reader protocol).
+# quiescence early exit does not flatter either path.
 LAST_TIMING: Optional[Dict] = None
-TIMING_LOG: List[Dict] = []
+TIMING_LOG: BoundedLog = BoundedLog(ACTIVE_LOG_MAX)
+
+# Per-segment trace readback (`SimConfig.trace` enabled): each execute
+# call appends one (tag, trace[K, T, C], TraceLayout) entry as its chunks
+# land — the in-process mirror of what `RunStore.spool_chunk` writes to
+# disk. Bounded much tighter than the scalar logs: a trace block is
+# K*T*C int32s, not a tuple of scalars.
+LAST_TRACE: Optional[Tuple[np.ndarray, TraceLayout]] = None
+TRACE_LOG_MAX = 64
+TRACE_LOG: BoundedLog = BoundedLog(TRACE_LOG_MAX)
 
 
 def last_plan() -> Optional[ExecPlan]:
@@ -72,6 +111,12 @@ def last_active_ticks() -> Optional[np.ndarray]:
 
 def last_timing() -> Optional[Dict]:
     return LAST_TIMING
+
+
+def last_trace() -> Optional[Tuple[np.ndarray, TraceLayout]]:
+    """(trace[K, T, C], layout) of the most recent traced `execute` call —
+    None when the last call ran with tracing off."""
+    return LAST_TRACE
 
 
 def lane_sharding(devices: Sequence) -> NamedSharding:
@@ -103,13 +148,16 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
     `sweep.run_batch`. Per-lane `active_ticks` from the engine's
     quiescence early exit land in `LAST_ACTIVE` / `ACTIVE_LOG` (and in the
     store manifest) rather than the return value, so existing callers keep
-    their (state, emits) contract. With a `RunStore`, each chunk's trimmed
+    their (state, emits) contract. Likewise with `cfg.trace` enabled: the
+    captured channels are split off each landed chunk's emit rows into
+    `LAST_TRACE` / `TRACE_LOG` (and spooled beside the chunk when a store
+    is given), and the returned emits stay (K, T, 3). With a `RunStore`, each chunk's trimmed
     results are spooled to disk the moment it lands; `collect=False`
     (requires a store) additionally drops each chunk from host memory once
     spooled and returns None — the streaming mode for grids whose merged
     result would not fit on host (reassemble lazily via
     `store.load_tag(tag)`)."""
-    global LAST_PLAN, LAST_ACTIVE, LAST_TIMING
+    global LAST_PLAN, LAST_ACTIVE, LAST_TIMING, LAST_TRACE
     LAST_PLAN = plan
     if not collect and store is None:
         raise ValueError("collect=False discards results: pass a store")
@@ -130,6 +178,10 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
                                 batched=True, segment=plan.segment,
                                 early_exit=plan.early_exit)
     sharding = lane_sharding(plan.devices) if plan.sharded else None
+    # trace channels ride the emit rows (see sim/trace/): split them off
+    # at landing so callers keep the (K, T, 3) emits contract, spool them
+    # next to the chunk, and mirror them in TRACE_LOG for in-process reads
+    lay = trace_layout(cfg.trace, plan.dims.n_ports, plan.dims.n_switches)
 
     def dispatch(lo: int):
         """Stack + (optionally) shard one chunk and launch it. Tail chunks
@@ -151,14 +203,21 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
 
     chunks: List[Tuple[SimState, np.ndarray]] = []
     actives: List[np.ndarray] = []
+    traces: List[np.ndarray] = []
     inflight: deque = deque()
 
     def land_oldest():
         idx, (n_real, st, emits, active) = inflight.popleft()
         st, emits, active = _land(st, emits, active, n_real)
         actives.append(active)
+        emits, trace = split_emits(emits, lay)
+        if lay.width:
+            traces.append(trace)
         if store is not None:
-            store.spool_chunk(tag, idx, st, emits, active_ticks=active)
+            store.spool_chunk(tag, idx, st, emits, active_ticks=active,
+                              trace=trace if lay.width else None,
+                              trace_channels=lay.meta() if lay.width
+                              else None)
         if collect:
             chunks.append((st, emits))
 
@@ -173,7 +232,13 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
 
     LAST_ACTIVE = np.concatenate(actives) if actives else np.zeros(0, np.int32)
     ACTIVE_LOG.append((tag, LAST_ACTIVE))
-    del ACTIVE_LOG[:-ACTIVE_LOG_MAX]      # bound a long-lived process
+    if lay.width:
+        LAST_TRACE = (np.concatenate(traces) if traces
+                      else np.zeros((0, plan.n_ticks, lay.width), np.int32),
+                      lay)
+        TRACE_LOG.append((tag,) + LAST_TRACE)
+    else:
+        LAST_TRACE = None
 
     active_total = int(LAST_ACTIVE.sum())
     LAST_TIMING = {
@@ -186,7 +251,6 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
         "tick_wall_us": wall_s * 1e6 / max(active_total, 1),
     }
     TIMING_LOG.append(LAST_TIMING)
-    del TIMING_LOG[:-ACTIVE_LOG_MAX]
 
     if not collect:
         return None

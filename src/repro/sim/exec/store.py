@@ -29,15 +29,22 @@ from __future__ import annotations
 
 import json
 import time
+import warnings
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from ..engine import SimState
+from ..trace import TraceLayout
 
 BENCH_FILENAME = "BENCH_sweep.json"
 _EMITS_KEY = "__emits__"
+_TRACE_KEY = "__trace__"
+
+# write_bench keeps at most this many trajectory entries per scenario, so
+# the committed BENCH_sweep.json stops growing without bound across PRs.
+TRAJECTORY_CAP = 50
 
 
 class RunStore:
@@ -61,25 +68,36 @@ class RunStore:
 
     def spool_chunk(self, tag: str, index: int, state: SimState,
                     emits: np.ndarray,
-                    active_ticks: Optional[np.ndarray] = None) -> Path:
+                    active_ticks: Optional[np.ndarray] = None,
+                    trace: Optional[np.ndarray] = None,
+                    trace_channels: Optional[list] = None) -> Path:
         """Write one landed chunk to disk and persist the manifest.
         Filenames carry a global sequence number and runs of a repeated tag
         (same protocol in different groups/scenarios) are numbered, so
         nothing ever collides or interleaves. `active_ticks` (per-lane
         ticks actually simulated before the quiescence early exit) is
         recorded in the manifest entry — readback provenance, not part of
-        the npz round-trip."""
+        the npz round-trip. A traced run additionally passes the chunk's
+        `trace` block (K, T, C) — stored inside the SAME npz, so `load_tag`
+        readers that predate tracing keep working — plus the JSON channel
+        map `trace_channels` (`TraceLayout.meta()`), recorded in the
+        manifest so replay tools can interpret the columns without the
+        SimConfig that produced them."""
         self.chunk_dir.mkdir(parents=True, exist_ok=True)
         run = self._run_of(tag, index)
         path = (self.chunk_dir /
                 f"{len(self.manifest):04d}_{tag}_r{run}_c{index}.npz")
-        np.savez(path, **{_EMITS_KEY: np.asarray(emits)},
+        extra = ({_TRACE_KEY: np.asarray(trace)} if trace is not None
+                 else {})
+        np.savez(path, **{_EMITS_KEY: np.asarray(emits)}, **extra,
                  **{k: np.asarray(v) for k, v in state._asdict().items()})
         entry = {
             "tag": tag, "run": run, "chunk": index, "path": str(path),
             "lanes": int(np.asarray(emits).shape[0])}
         if active_ticks is not None:
             entry["active_ticks"] = [int(a) for a in np.asarray(active_ticks)]
+        if trace_channels is not None:
+            entry["trace_channels"] = trace_channels
         self.manifest.append(entry)
         self.manifest_path.write_text(json.dumps(self.manifest, indent=1)
                                       + "\n")
@@ -114,6 +132,41 @@ class RunStore:
                                   for st, _ in parts])
             for name in SimState._fields})
         return merged, np.concatenate([em for _, em in parts])
+
+    def _run_entries(self, tag: str, run: Optional[int]) -> List[dict]:
+        runs = self.runs_of(tag)
+        if not runs:
+            raise KeyError(f"no spooled chunks tagged {tag!r}")
+        run = runs[-1] if run is None else run
+        entries = sorted((e for e in self.manifest
+                          if e["tag"] == tag and e["run"] == run),
+                         key=lambda e: e["chunk"])
+        if not entries:
+            raise KeyError(f"tag {tag!r} has runs {runs}, not {run}")
+        return entries
+
+    def load_trace(self, tag: str, run: Optional[int] = None
+                   ) -> Tuple[np.ndarray, TraceLayout, int,
+                              Optional[np.ndarray]]:
+        """Reassemble ONE spooled run's trace block (same run selection as
+        `load_tag`). Returns ``(trace[K, T, C], layout, run_no,
+        active_ticks[K] or None)``; raises KeyError when that run was
+        spooled with tracing off."""
+        entries = self._run_entries(tag, run)
+        meta = entries[0].get("trace_channels")
+        if meta is None:
+            raise KeyError(f"run {entries[0]['run']} of tag {tag!r} was "
+                           "spooled without trace channels (SimConfig."
+                           "trace was off)")
+        parts = []
+        for e in entries:
+            with np.load(e["path"]) as z:
+                parts.append(np.asarray(z[_TRACE_KEY]))
+        active = (np.concatenate(
+            [np.asarray(e["active_ticks"], np.int64) for e in entries])
+            if all("active_ticks" in e for e in entries) else None)
+        return (np.concatenate(parts), TraceLayout.from_meta(meta),
+                int(entries[0]["run"]), active)
 
     # ---- benchmark trajectory -----------------------------------------------
     def record_scenario(self, name: str, *, wall_s: float, grid_points: int,
@@ -162,7 +215,10 @@ class RunStore:
         with run_id/date), and ``scenarios`` becomes the latest record per
         scenario *across runs* — so the committed perf trajectory
         accumulates across PRs instead of being overwritten, and partial
-        reruns (one scenario re-benchmarked) never drop the rest."""
+        reruns (one scenario re-benchmarked) never drop the rest. Each
+        scenario's trajectory is capped at the most recent
+        `TRAJECTORY_CAP` entries so the committed file stops growing
+        without bound."""
         path = Path(path) if path is not None else self.root / BENCH_FILENAME
         created = time.strftime("%Y-%m-%dT%H:%M:%S")
         trajectory: Dict[str, List[dict]] = {}
@@ -173,11 +229,16 @@ class RunStore:
                 trajectory = {k: list(v) for k, v in
                               prior.get("trajectory", {}).items()}
                 latest = dict(prior.get("scenarios", {}))
-            except (ValueError, AttributeError):
-                pass  # unreadable prior file: start a fresh trajectory
+            except (ValueError, AttributeError) as err:
+                warnings.warn(
+                    f"unreadable prior bench file {path}: {err!r}; "
+                    "starting a fresh trajectory (its history is lost)",
+                    stacklevel=2)
         for name, rec in self.records.items():
             trajectory.setdefault(name, []).append(
                 {"run_id": self.run_id, "recorded_at": created, **rec})
+        trajectory = {name: hist[-TRAJECTORY_CAP:]
+                      for name, hist in trajectory.items()}
         latest.update(self.records)
         payload = {
             "run_id": self.run_id,

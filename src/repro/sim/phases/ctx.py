@@ -113,6 +113,9 @@ class StepCtx(NamedTuple):
     f_paused: Optional[jnp.ndarray] = None
     # -- phase 2 (switch_tx) -------------------------------------------------
     can_tx: Optional[jnp.ndarray] = None       # (P,)
+    sel_q: Optional[jnp.ndarray] = None        # (P,) picked queue (garbage
+    #                                            where ~can_tx; trace capture
+    #                                            masks it with can_tx)
     tx_entry: Optional[jnp.ndarray] = None     # (P,)
     tx_hop: Optional[jnp.ndarray] = None       # (P,)
     qhead: Optional[jnp.ndarray] = None

@@ -19,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..trace import capture_row
 from .ctx import I32, PhaseEnv, StepCtx
 
 
@@ -102,4 +103,10 @@ def stats(env: PhaseEnv, st, ops, topo, ctx: StepCtx):
              if cfg.probe_flow >= 0 else jnp.int32(0))
     emit = jnp.stack([ctx.sw_occ.max().astype(I32),
                       ctx.pfc_paused.sum().astype(I32), probe])
+    if cfg.trace.enabled:
+        # opt-in trace channels ride the emit row (sim/trace/): same
+        # dynamic_update_slice landing path, zero extra scan carries.
+        # When off, this branch is untraced and the row is exactly the
+        # legacy 3 columns — the program is byte-identical to untraced.
+        emit = jnp.concatenate([emit, capture_row(env, st, ops, ctx)])
     return new_st, emit

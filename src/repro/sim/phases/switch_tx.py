@@ -87,7 +87,8 @@ def switch_tx(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
         BIG, st.qsrf)
     tx_ewma = st.tx_ewma * (1 - 1 / 32) + can_tx.astype(jnp.float32) / 32
 
-    return ctx._replace(can_tx=can_tx, tx_entry=tx_entry, tx_hop=tx_hop,
+    return ctx._replace(can_tx=can_tx, sel_q=sel_q, tx_entry=tx_entry,
+                        tx_hop=tx_hop,
                         qhead=qhead, qptr=qptr, qsrf=qsrf, f_cnt=f_cnt,
                         f_q=f_q, f_paused=f_paused, d_cnt=d_cnt, d_q=d_q,
                         ing_occ=ing_occ, bucket_cnt=bucket_cnt,

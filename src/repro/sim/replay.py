@@ -1,0 +1,14 @@
+"""``python -m repro.sim.replay`` — the spooled-trace replay/diff CLI.
+
+Thin shim so the tool has a stable module path; everything lives in
+`repro.sim.trace.replay` (imported here, lazily relative to the trace
+package, to keep `repro.sim.trace` itself free of exec-layer imports).
+"""
+from __future__ import annotations
+
+import sys
+
+from .trace.replay import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,7 +44,7 @@ Registry:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .config import PRESETS, SimConfig
@@ -198,7 +198,7 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
         unroll: int = 1, max_batch_bytes: Optional[int] = None,
         devices: Optional[Sequence] = None, auto_budget: bool = True,
         store=None, early_exit: bool = True,
-        long_lived_pkts: Optional[int] = None):
+        long_lived_pkts: Optional[int] = None, trace=None):
     """Run one registry scenario through the batched sweep subsystem.
 
     `clos` sets the fabric for scenarios without their own `topologies`
@@ -209,14 +209,19 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
     `early_exit=False` forces the flat scan (A/B timing baseline);
     `long_lived_pkts` overrides the long-lived flow size (smoke-scale runs
     of `table1_long_lived` use it so the probe flow can complete and the
-    drain tail goes quiescent). Returns a list of sweep.CaseResult (one
-    per grid point), each carrying per-config SimState, emits, and
-    summarized RunMetrics."""
+    drain tail goes quiescent). A `trace` TraceSpec turns on per-tick
+    channel capture for every case of the grid (spooled per segment when
+    a `store` is given; see sim/trace/). Returns a list of
+    sweep.CaseResult (one per grid point), each carrying per-config
+    SimState, emits, and summarized RunMetrics."""
     from . import sweep
     sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
           else get(name_or_scenario))
     topo = build(clos or ClosParams())
     cases = sc.cases(topo, n_flows=n_flows, long_lived_pkts=long_lived_pkts)
+    if trace is not None:
+        cases = [(label, replace(cfg, trace=trace), fl)
+                 for label, cfg, fl in cases]
     return sweep.run_grid(topo, cases,
                           drain=(drain if drain is not None
                                  else sc.drain_ticks),

@@ -174,7 +174,8 @@ def lane_state_bytes(dims: TopoDims, cfg: SimConfig, n_flows: int,
                      n_ticks: int = 0) -> int:
     """Bytes one batch lane holds on device: the padded SimState (~F x H +
     P x Q x CAP ints, measured exactly via eval_shape — no allocation) plus
-    its (T, 3) emit rows. Used to chunk grids against `max_batch_bytes`.
+    its (T, 3 + trace channels) emit rows. Used to chunk grids against
+    `max_batch_bytes`.
 
     Because the measurement walks the shapes `make_step(dims, ...)` would
     allocate, it automatically includes the `dims.prop_max`-padded wire
@@ -185,7 +186,9 @@ def lane_state_bytes(dims: TopoDims, cfg: SimConfig, n_flows: int,
     init_state, _ = engine.make_step(dims, engine.static_cfg(cfg), n_flows)
     leaves = jax.tree_util.tree_leaves(jax.eval_shape(init_state))
     state = sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
-    return state + n_ticks * 3 * 4
+    emit_w = engine.EMIT_BASE + engine.trace_layout(
+        cfg.trace, dims.n_ports, dims.n_switches).width
+    return state + n_ticks * emit_w * 4
 
 
 def trim_state(state: SimState, n_flows: int,

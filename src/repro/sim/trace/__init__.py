@@ -1,0 +1,20 @@
+"""Opt-in per-tick trace capture for the batched simulator.
+
+* `spec`    — `TraceSpec` (the channel selection folded into
+  `SimConfig.trace` and therefore the compile cache) and the
+  `layout`/`TraceLayout` column map every reader and writer shares.
+* `capture` — the in-trace row builder `phases/stats.py` appends to the
+  emit row.
+* `replay`  — spooled-trace loading, timelines, pause-storm/occupancy
+  summaries, and the tick-by-tick two-run diff behind
+  ``python -m repro.sim.replay`` (imported lazily by the CLI shim — not
+  here — so the capture path never drags in the exec layer).
+
+See docs/ARCHITECTURE.md "Trace capture & replay".
+"""
+from .capture import capture_row  # noqa: F401
+from .spec import (Channel, EMIT_BASE, TraceLayout, TraceSpec,  # noqa: F401
+                   layout, split_emits)
+
+__all__ = ["Channel", "EMIT_BASE", "TraceLayout", "TraceSpec",
+           "capture_row", "layout", "split_emits"]

@@ -1,0 +1,55 @@
+"""In-trace channel capture: one int32 row per tick, appended to the emit
+row by `phases/stats.py`.
+
+The capture rides the existing emit machinery — `stats` concatenates this
+row after the legacy ``[max buffer, pfc-paused ports, probe]`` columns and
+the engine lands the widened row through the same
+``dynamic_update_slice`` path — so tracing adds zero extra scan carries,
+no host callbacks, and composes with the active-horizon early exit (the
+quiescent tail's constant row is reconstructed by one extra step
+evaluation in ``engine._finish_tail``; see that docstring for the
+bit-identity argument).
+
+Column order MUST match `trace.spec.layout`; the pair is pinned by
+tests/test_sim_trace.py. Every value is derived from `StepCtx` / `SimState`
+leaves the phases already materialized this tick, so capture never changes
+the simulation itself — only what the program outputs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def capture_row(env, st, ops, ctx) -> jnp.ndarray:
+    """The (C,) trace row of one tick, in `layout` column order.
+
+    `st` is the tick's *pre*-state and `ctx` the fully-threaded StepCtx
+    after phase 5 (exactly what `stats` sees): snapshot channels (sw_occ,
+    paused_q, pfc, active, probe, delivered, sel_q/can_tx) read the same
+    values the emit row and the next state are assembled from; transition
+    channels (started, completed, pause_tx) count this tick's events."""
+    spec = env.cfg.trace
+    cols = []
+    if spec.switch_occ:
+        cols.append(ctx.sw_occ.astype(I32))                       # (NSW,)
+    if spec.port_pause:
+        cols.append(ctx.qpaused.sum(axis=1).astype(I32))          # (P,)
+        cols.append(ctx.pfc_paused.astype(I32))                   # (P,)
+        cols.append(jnp.reshape(ctx.n_pauses, (1,)).astype(I32))
+    if spec.flow_state:
+        started = (ops.arrival == ctx.t).sum()
+        completed = ((ctx.done >= 0) & (st.done < 0)).sum()
+        # phantom flows (arrival = 2**30) never count as active: their
+        # arrival tick is beyond any horizon by the padding contract
+        active = ((ops.arrival <= ctx.t) & (ctx.done < 0)).sum()
+        probe = (st.delivered[env.cfg.probe_flow]
+                 if env.cfg.probe_flow >= 0 else jnp.int32(0))
+        delivered = ctx.delivered.sum()
+        cols.append(jnp.stack([started, completed, active, probe,
+                               delivered]).astype(I32))
+    if spec.kernel_path:
+        cols.append(jnp.where(ctx.can_tx, ctx.sel_q, -1).astype(I32))
+        cols.append(ctx.can_tx.astype(I32))                       # (P,)
+    return jnp.concatenate(cols)

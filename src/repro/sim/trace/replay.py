@@ -1,0 +1,357 @@
+"""Replay, inspect, and diff spooled trace runs.
+
+``python -m repro.sim.replay`` (a thin shim over `main` here) loads the
+npz segments a `RunStore` spooled during a traced sweep and renders them
+on the terminal — no simulator, no jax: replay works on any machine that
+can read the store directory, long after (or *while*: ``watch``) the
+sweep ran.
+
+Subcommands:
+
+* ``list ROOT``            — spooled tags/runs, lanes, trace channels.
+* ``show ROOT TAG``        — per-tick timelines (unicode sparklines per
+  channel group) plus the pause-storm / occupancy-peak / flow-progress
+  summary for one lane.
+* ``diff ROOT TAG_A TAG_B``— tick-by-tick comparison of two runs on the
+  same grid lane (e.g. BFC vs DCQCN on one scenario lane): first
+  divergence tick overall, per-channel first divergences, and the
+  diverging column values around the edge.
+* ``watch ROOT``           — poll the manifest and report chunks as a
+  live sweep lands them (the drain monitor).
+
+The channel map travels in the manifest (`TraceLayout.meta`), so the
+reader never guesses column meaning; diffing requires the two runs to
+share a channel layout — i.e. the same TraceSpec on the same padded grid
+shape, which any two protocol variants of one scenario satisfy.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .spec import TraceLayout
+
+SPARK = "▁▂▃▄▅▆▇█"
+
+
+@dataclass
+class TraceRun:
+    """One spooled run of one tag, reassembled: (K, T, C) + column map."""
+    tag: str
+    run: int
+    trace: np.ndarray            # (K, T, C) int32
+    layout: TraceLayout
+    active_ticks: Optional[np.ndarray] = None   # (K,) when recorded
+
+    @property
+    def n_lanes(self) -> int:
+        return self.trace.shape[0]
+
+    @property
+    def n_ticks(self) -> int:
+        return self.trace.shape[1]
+
+    def channel(self, lane: int, name: str) -> np.ndarray:
+        """(T, W) columns of one named channel on one lane."""
+        return self.trace[lane, :, self.layout.slice_of(name)]
+
+
+def load_run(root, tag: str, run: Optional[int] = None) -> TraceRun:
+    """Load one spooled trace run from a RunStore directory."""
+    from ..exec.store import RunStore
+    store = RunStore(root)
+    trace, lay, run_no, active = store.load_trace(tag, run)
+    return TraceRun(tag=tag, run=run_no, trace=trace, layout=lay,
+                    active_ticks=active)
+
+
+# ---- rendering ---------------------------------------------------------------
+
+def sparkline(series: np.ndarray, width: int = 72) -> str:
+    """Downsample a per-tick series to `width` bins (max within bin) and
+    render as unicode blocks, normalized to the series peak."""
+    series = np.asarray(series, np.int64)
+    if series.size == 0:
+        return ""
+    bins = np.array_split(series, min(width, series.size))
+    vals = np.array([b.max() for b in bins], np.int64)
+    peak = max(int(vals.max()), 1)
+    idx = (vals * (len(SPARK) - 1) + peak - 1) // peak  # ceil: >0 visible
+    return "".join(SPARK[i] for i in idx)
+
+
+def group_series(run: TraceRun, lane: int) -> List[Tuple[str, np.ndarray]]:
+    """One representative per-tick series per captured channel group."""
+    tr = run.trace[lane]
+    lay = run.layout
+    out: List[Tuple[str, np.ndarray]] = []
+    for group in lay.groups():
+        if group == "occ":
+            out.append(("occ: max switch occupancy",
+                        tr[:, lay.slice_of("sw_occ")].max(axis=1)))
+        elif group == "pause":
+            out.append(("pause: head-paused queues",
+                        tr[:, lay.slice_of("paused_q")].sum(axis=1)))
+            out.append(("pause: PFC-paused ports",
+                        tr[:, lay.slice_of("pfc")].sum(axis=1)))
+        elif group == "flow":
+            out.append(("flow: active flows",
+                        tr[:, lay.slice_of("active")][:, 0]))
+            out.append(("flow: completions/tick",
+                        tr[:, lay.slice_of("completed")][:, 0]))
+        elif group == "kernel":
+            out.append(("kernel: transmitting ports",
+                        tr[:, lay.slice_of("can_tx")].sum(axis=1)))
+    return out
+
+
+def _storms(paused: np.ndarray) -> List[Tuple[int, int, int]]:
+    """Contiguous (start, length, peak) intervals where `paused` > 0."""
+    storms: List[Tuple[int, int, int]] = []
+    start = None
+    for t, v in enumerate(paused.tolist() + [0]):   # sentinel closes tail
+        if v > 0 and start is None:
+            start = t
+        elif v <= 0 and start is not None:
+            seg = paused[start:t]
+            storms.append((start, t - start, int(seg.max())))
+            start = None
+    return storms
+
+
+def summarize(run: TraceRun, lane: int) -> str:
+    """Pause storms, occupancy peaks, and flow progress of one lane."""
+    tr = run.trace[lane]
+    lay = run.layout
+    lines = [f"lane {lane}: {run.n_ticks} ticks, {lay.width} channels "
+             f"({'+'.join(lay.groups())})"]
+    if run.active_ticks is not None:
+        lines[-1] += f", active to tick {int(run.active_ticks[lane])}"
+    if "occ" in lay.groups():
+        occ = tr[:, lay.slice_of("sw_occ")]
+        peak_t, peak_sw = np.unravel_index(int(occ.argmax()), occ.shape)
+        lines.append(f"  occupancy peak: {int(occ[peak_t, peak_sw])} pkts "
+                     f"(switch {int(peak_sw)} @ tick {int(peak_t)})")
+    if "pause" in lay.groups():
+        paused = tr[:, lay.slice_of("paused_q")].sum(axis=1) \
+            + tr[:, lay.slice_of("pfc")].sum(axis=1)
+        storms = _storms(paused)
+        sent = int(tr[:, lay.slice_of("pause_tx")].sum())
+        if storms:
+            s0, slen, speak = max(storms, key=lambda s: s[1])
+            lines.append(
+                f"  pause storms: {len(storms)} "
+                f"({int((paused > 0).sum())} paused ticks, {sent} pause "
+                f"frames); longest {slen} ticks from tick {s0} "
+                f"(peak {speak} paused queues)")
+        else:
+            lines.append(f"  pause storms: none ({sent} pause frames)")
+    if "flow" in lay.groups():
+        completed = tr[:, lay.slice_of("completed")][:, 0]
+        done_t = np.nonzero(completed)[0]
+        lines.append(
+            f"  flows: {int(completed.sum())} completed"
+            + (f", last at tick {int(done_t[-1])}" if done_t.size else "")
+            + f"; {int(tr[-1, lay.slice_of('delivered')][0])} pkts "
+              f"delivered")
+    if "kernel" in lay.groups():
+        can = tr[:, lay.slice_of("can_tx")]
+        lines.append(f"  switch tx: {int(can.sum())} dequeues, mean "
+                     f"{can.sum(axis=1).mean():.2f} ports/tick")
+    return "\n".join(lines)
+
+
+def timelines(run: TraceRun, lane: int, t0: int = 0,
+              t1: Optional[int] = None, width: int = 72) -> str:
+    t1 = run.n_ticks if t1 is None else min(t1, run.n_ticks)
+    lines = [f"ticks [{t0}, {t1}) of {run.n_ticks}"]
+    for label, series in group_series(run, lane):
+        seg = series[t0:t1]
+        peak = int(seg.max()) if seg.size else 0
+        lines.append(f"  {label:<32} peak {peak:>7} "
+                     f"{sparkline(seg, width)}")
+    return "\n".join(lines)
+
+
+# ---- diff --------------------------------------------------------------------
+
+@dataclass
+class DiffReport:
+    first_tick: Optional[int]                 # None = identical
+    per_channel: List[Tuple[str, int]]        # (channel, first divergence)
+    n_ticks: int
+    n_diverging_ticks: int
+
+    def identical(self) -> bool:
+        return self.first_tick is None
+
+
+def diff_runs(a: TraceRun, b: TraceRun, lane: int = 0) -> DiffReport:
+    """Tick-by-tick comparison of one lane of two runs (common horizon)."""
+    if a.layout.meta() != b.layout.meta():
+        raise ValueError(
+            f"trace layouts differ ({a.tag}: {a.layout.meta()} vs "
+            f"{b.tag}: {b.layout.meta()}); diff needs the same TraceSpec "
+            "on the same padded grid shape")
+    n = min(a.n_ticks, b.n_ticks)
+    ta, tb = a.trace[lane, :n], b.trace[lane, :n]
+    neq = ta != tb                                  # (n, C)
+    tick_neq = neq.any(axis=1)
+    first = int(np.argmax(tick_neq)) if tick_neq.any() else None
+    per_channel = []
+    for ch in a.layout.channels:
+        sub = neq[:, ch.start:ch.start + ch.width].any(axis=1)
+        if sub.any():
+            per_channel.append((ch.name, int(np.argmax(sub))))
+    return DiffReport(first_tick=first, per_channel=per_channel,
+                      n_ticks=n, n_diverging_ticks=int(tick_neq.sum()))
+
+
+def render_diff(a: TraceRun, b: TraceRun, lane: int, rep: DiffReport,
+                context: int = 3) -> str:
+    head = f"diff {a.tag}(run {a.run}) vs {b.tag}(run {b.run}), lane {lane}"
+    if rep.identical():
+        return f"{head}\n  identical over {rep.n_ticks} ticks"
+    lines = [head,
+             f"  first divergence at tick {rep.first_tick} "
+             f"({rep.n_diverging_ticks}/{rep.n_ticks} ticks differ)"]
+    for name, t in rep.per_channel:
+        sl = a.layout.slice_of(name)
+        va = a.trace[lane, t, sl]
+        vb = b.trace[lane, t, sl]
+        cols = np.nonzero(va != vb)[0]
+        show = ", ".join(f"[{int(c)}] {int(va[c])}→{int(vb[c])}"
+                         for c in cols[:6])
+        more = f" (+{cols.size - 6} cols)" if cols.size > 6 else ""
+        lines.append(f"    {name:<10} diverges at tick {t}: {show}{more}")
+    t0 = max(0, rep.first_tick - context)
+    t1 = min(rep.n_ticks, rep.first_tick + context + 1)
+    lines.append(f"  per-tick diverging-column counts, "
+                 f"ticks [{t0}, {t1}):")
+    for t in range(t0, t1):
+        n = int((a.trace[lane, t] != b.trace[lane, t]).sum())
+        mark = " <- first" if t == rep.first_tick else ""
+        lines.append(f"    tick {t:>6}: {n:>4} columns differ{mark}")
+    return "\n".join(lines)
+
+
+# ---- CLI ---------------------------------------------------------------------
+
+def _cmd_list(args) -> int:
+    from ..exec.store import RunStore
+    store = RunStore(args.root)
+    if not store.manifest:
+        print(f"no spooled chunks under {args.root}")
+        return 1
+    print(f"{'tag':<24} {'run':>4} {'chunks':>6} {'lanes':>6} trace")
+    for tag in sorted({e["tag"] for e in store.manifest}):
+        for run in store.runs_of(tag):
+            entries = [e for e in store.manifest
+                       if e["tag"] == tag and e["run"] == run]
+            lanes = sum(e["lanes"] for e in entries)
+            meta = entries[0].get("trace_channels")
+            chans = ("+".join(TraceLayout.from_meta(meta).groups())
+                     if meta else "-")
+            print(f"{tag:<24} {run:>4} {len(entries):>6} {lanes:>6} "
+                  f"{chans}")
+    return 0
+
+
+def _cmd_show(args) -> int:
+    run = load_run(args.root, args.tag, args.run)
+    print(summarize(run, args.lane))
+    print(timelines(run, args.lane, t0=args.start,
+                    t1=args.end, width=args.width))
+    return 0
+
+
+def _cmd_diff(args) -> int:
+    a = load_run(args.root, args.tag_a, args.run_a)
+    b = load_run(args.root, args.tag_b, args.run_b)
+    rep = diff_runs(a, b, args.lane)
+    print(render_diff(a, b, args.lane, rep, context=args.context))
+    if args.expect == "diverge" and rep.identical():
+        print("ERROR: expected the runs to diverge; they are identical")
+        return 1
+    if args.expect == "same" and not rep.identical():
+        print("ERROR: expected identical runs; they diverge")
+        return 1
+    return 0
+
+
+def _cmd_watch(args) -> int:
+    """Poll the manifest and report chunks as a live sweep lands them.
+    Stops after `--idle` consecutive empty polls (0 = forever)."""
+    from ..exec.store import RunStore
+    seen = 0
+    idle = 0
+    while True:
+        store = RunStore(args.root)   # re-reads the manifest
+        new = store.manifest[seen:]
+        for e in new:
+            act = e.get("active_ticks")
+            act_s = (f", active max {max(act)}"
+                     if act else "")
+            tr = " +trace" if e.get("trace_channels") else ""
+            print(f"[{time.strftime('%H:%M:%S')}] {e['tag']} run "
+                  f"{e['run']} chunk {e['chunk']}: {e['lanes']} lane(s)"
+                  f"{act_s}{tr}", flush=True)
+        seen += len(new)
+        idle = 0 if new else idle + 1
+        if args.idle and idle >= args.idle:
+            print(f"idle for {idle} polls; {seen} chunk(s) total")
+            return 0
+        time.sleep(args.interval)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sim.replay",
+        description="inspect, replay, and diff spooled simulator traces")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("list", help="spooled tags/runs in a store")
+    p.add_argument("root")
+    p.set_defaults(fn=_cmd_list)
+
+    p = sub.add_parser("show", help="timelines + summary of one run")
+    p.add_argument("root")
+    p.add_argument("tag")
+    p.add_argument("--run", type=int, default=None)
+    p.add_argument("--lane", type=int, default=0)
+    p.add_argument("--start", type=int, default=0)
+    p.add_argument("--end", type=int, default=None)
+    p.add_argument("--width", type=int, default=72)
+    p.set_defaults(fn=_cmd_show)
+
+    p = sub.add_parser("diff",
+                       help="tick-by-tick diff of two runs on one lane")
+    p.add_argument("root")
+    p.add_argument("tag_a")
+    p.add_argument("tag_b")
+    p.add_argument("--run-a", type=int, default=None)
+    p.add_argument("--run-b", type=int, default=None)
+    p.add_argument("--lane", type=int, default=0)
+    p.add_argument("--context", type=int, default=3)
+    p.add_argument("--expect", choices=["diverge", "same"], default=None,
+                   help="exit 1 unless the comparison matches (CI guard)")
+    p.set_defaults(fn=_cmd_diff)
+
+    p = sub.add_parser("watch", help="follow a live sweep's chunk landings")
+    p.add_argument("root")
+    p.add_argument("--interval", type=float, default=2.0)
+    p.add_argument("--idle", type=int, default=0,
+                   help="stop after N empty polls (0 = run forever)")
+    p.set_defaults(fn=_cmd_watch)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,287 @@
+"""Trace capture & replay (sim/trace/): the opt-in per-tick channel layer.
+
+Pins the contracts the replay tooling depends on: the layout <-> capture
+column correspondence, emit-row parity (the legacy 3 columns must be
+derivable from the channels), bit-identity of traced runs between the
+segmented early-exit runner and the flat scan, the spool -> load_trace ->
+replay round-trip through the RunStore, first-divergence reporting of the
+two-protocol diff, the BoundedLog reader protocol, and the write_bench
+trajectory cap / unreadable-file warning satellites."""
+import json
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+from repro.sim import engine, sweep, topology, workload
+from repro.sim import exec as exec_
+from repro.sim.config import BFC, DCQCN, SimConfig
+from repro.sim.exec import dispatch
+from repro.sim.exec.store import TRAJECTORY_CAP, RunStore
+from repro.sim.topology import ClosParams, TopoDims
+from repro.sim.trace import (EMIT_BASE, TraceLayout, TraceSpec, layout,
+                             split_emits)
+from repro.sim.trace.replay import TraceRun, diff_runs, load_run, render_diff
+from dataclasses import replace
+
+CLOS = ClosParams(n_servers=16, n_tor=2, n_spine=2, switch_buffer_pkts=2048)
+FULL = TraceSpec.full()
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    topo = topology.build(CLOS)
+    wp = workload.WorkloadParams(workload="uniform", load=0.5, seed=7)
+    return topo, workload.generate(topo, wp, n_flows=48)
+
+
+def _cfg(proto=BFC, **kw):
+    return SimConfig(proto=proto, clos=CLOS, probe_flow=0,
+                     trace=FULL, **kw)
+
+
+@pytest.fixture(scope="module")
+def spooled(tiny, tmp_path_factory):
+    """BFC + DCQCN traced 2-lane batches spooled through one RunStore."""
+    topo, flows = tiny
+    root = tmp_path_factory.mktemp("trace_store")
+    store = RunStore(root)
+    n_ticks = int(flows.horizon + 1500)
+    out = {}
+    for proto in (BFC, DCQCN):
+        st, em = sweep.run_batch(topo, [flows, flows], _cfg(proto),
+                                 n_ticks, store=store)
+        out[proto.name] = (st, em, exec_.last_trace())
+    return root, store, out, n_ticks
+
+
+# ---- layout <-> capture correspondence --------------------------------------
+
+def test_layout_matches_capture_width(tiny):
+    """The layout's declared width IS the width capture_row emits — the
+    engine's emit buffer is sized from the layout, so a drift would crash
+    (or worse, misalign) every traced run."""
+    topo, flows = tiny
+    dims = TopoDims.of(topo)
+    lay = layout(FULL, dims.n_ports, dims.n_switches)
+    _, em = engine.run(topo, flows, _cfg(), 256)
+    assert em.shape[1] == EMIT_BASE + lay.width
+    # column order: occ | pause | flow | kernel, contiguous from 0
+    assert lay.groups() == ["occ", "pause", "flow", "kernel"]
+    assert [c.start for c in lay.channels] == list(
+        np.cumsum([0] + [c.width for c in lay.channels[:-1]]))
+    # partial specs nest: each group's channels keep their widths
+    part = layout(TraceSpec(port_pause=True), dims.n_ports, dims.n_switches)
+    assert [c.name for c in part.channels] == ["paused_q", "pfc", "pause_tx"]
+    assert part.width == 2 * dims.n_ports + 1
+
+
+def test_off_spec_is_legacy_width(tiny):
+    topo, flows = tiny
+    dims = TopoDims.of(topo)
+    assert not TraceSpec().enabled
+    assert layout(TraceSpec(), dims.n_ports, dims.n_switches).width == 0
+    _, em = engine.run(topo, flows, SimConfig(proto=BFC, clos=CLOS), 256)
+    assert em.shape[1] == EMIT_BASE
+
+
+def test_layout_meta_round_trip(tiny):
+    topo, _ = tiny
+    dims = TopoDims.of(topo)
+    lay = layout(FULL, dims.n_ports, dims.n_switches)
+    back = TraceLayout.from_meta(json.loads(json.dumps(lay.meta())))
+    assert back == lay
+    assert back.slice_of("pfc") == lay.slice_of("pfc")
+    with pytest.raises(KeyError):
+        lay.slice_of("nope")
+
+
+# ---- emit-row parity --------------------------------------------------------
+
+def test_emit_row_parity(tiny):
+    """The legacy [max buffer, pfc-paused ports, probe] row must be
+    derivable from the trace channels — the trace is a strict superset of
+    the emit stream."""
+    topo, flows = tiny
+    dims = TopoDims.of(topo)
+    lay = layout(FULL, dims.n_ports, dims.n_switches)
+    cfg = _cfg(proto=DCQCN)            # pfc=True: column 1 is non-trivial
+    n_ticks = int(flows.horizon + 1000)
+    _, em = engine.run(topo, flows, cfg, n_ticks)
+    legacy, tr = split_emits(em, lay)
+    un_cfg = replace(cfg, trace=TraceSpec())
+    _, em0 = engine.run(topo, flows, un_cfg, n_ticks)
+    assert np.array_equal(legacy, em0)
+    assert np.array_equal(tr[:, lay.slice_of("sw_occ")].max(axis=1),
+                          em0[:, 0])
+    assert np.array_equal(tr[:, lay.slice_of("pfc")].sum(axis=1),
+                          em0[:, 1])
+    assert np.array_equal(tr[:, lay.slice_of("probe")][:, 0], em0[:, 2])
+    # flow accounting closes: every flow starts and completes exactly once
+    assert tr[:, lay.slice_of("started")].sum() == flows.n_flows
+    assert tr[:, lay.slice_of("completed")].sum() == flows.n_flows
+    assert tr[-1, lay.slice_of("active")][0] == 0
+
+
+def test_traced_segmented_bit_identical_to_flat(tiny):
+    """Early exit stays on while tracing: the step-once quiescent-tail row
+    must reproduce the flat scan's channels bit-for-bit, and tracing must
+    not perturb the final state."""
+    topo, flows = tiny
+    cfg = _cfg()
+    n_ticks = int(flows.horizon + 3000)      # drain-dominated
+    st_f, em_f = engine.run(topo, flows, cfg, n_ticks, early_exit=False)
+    st_s, em_s = engine.run(topo, flows, cfg, n_ticks)
+    assert np.array_equal(em_f, em_s)
+    un_st, _ = engine.run(topo, flows, replace(cfg, trace=TraceSpec()),
+                          n_ticks)
+    for name in st_s._fields:
+        assert np.array_equal(np.asarray(getattr(st_s, name)),
+                              np.asarray(getattr(st_f, name))), name
+        assert np.array_equal(np.asarray(getattr(st_s, name)),
+                              np.asarray(getattr(un_st, name))), \
+            f"tracing changed state leaf {name}"
+
+
+# ---- spool -> load -> replay round-trip -------------------------------------
+
+def test_spool_round_trip(spooled, tiny):
+    root, store, out, n_ticks = spooled
+    topo, _ = tiny
+    dims = TopoDims.of(topo)
+    lay = layout(FULL, dims.n_ports, dims.n_switches)
+    for tag in ("bfc", "dcqcn"):
+        _, em, (tr_mem, lay_mem) = out[tag]
+        assert em.shape[-1] == EMIT_BASE     # dispatch split the trace off
+        got, got_lay, run_no, active = store.load_trace(tag)
+        assert got_lay.meta() == lay.meta() == lay_mem.meta()
+        assert np.array_equal(got, tr_mem)
+        assert got.shape == (2, n_ticks, lay.width)
+        assert active is not None and active.shape == (2,)
+        # load_tag (legacy reader) still round-trips the split emits
+        _, em_disk = store.load_tag(tag)
+        assert np.array_equal(em_disk, em)
+        run = load_run(root, tag)
+        assert isinstance(run, TraceRun) and run.run == run_no
+        assert np.array_equal(run.trace, got)
+        assert np.array_equal(run.channel(0, "pfc"),
+                              got[0][:, lay.slice_of("pfc")])
+
+
+def test_load_trace_untraced_run_raises(tiny, tmp_path):
+    topo, flows = tiny
+    store = RunStore(tmp_path)
+    sweep.run_batch(topo, [flows], SimConfig(proto=BFC, clos=CLOS), 512,
+                    store=store)
+    assert exec_.last_trace() is None
+    with pytest.raises(KeyError, match="without trace"):
+        store.load_trace("bfc")
+
+
+# ---- diff / first divergence ------------------------------------------------
+
+def test_two_protocol_diff_first_divergence(spooled):
+    root, _, out, _ = spooled
+    a = load_run(root, "bfc")
+    b = load_run(root, "dcqcn")
+    rep = diff_runs(a, b, lane=0)
+    neq = (out["bfc"][2][0][0] != out["dcqcn"][2][0][0]).any(axis=1)
+    assert neq.any() and rep.first_tick == int(np.argmax(neq))
+    assert rep.n_diverging_ticks == int(neq.sum())
+    # per-channel first divergences are >= the overall first tick and
+    # cover every channel that differs anywhere
+    assert rep.per_channel
+    assert min(t for _, t in rep.per_channel) == rep.first_tick
+    text = render_diff(a, b, 0, rep)
+    assert f"first divergence at tick {rep.first_tick}" in text
+    # identical runs: no divergence
+    same = diff_runs(a, a, lane=0)
+    assert same.identical() and same.per_channel == []
+    assert "identical" in render_diff(a, a, 0, same)
+
+
+def test_diff_rejects_mismatched_layouts(spooled):
+    root, _, _, _ = spooled
+    a = load_run(root, "bfc")
+    b = load_run(root, "dcqcn")
+    b = TraceRun(tag=b.tag, run=b.run, trace=b.trace[:, :, :5],
+                 layout=TraceLayout(b.layout.channels[:1], 5))
+    with pytest.raises(ValueError, match="layouts differ"):
+        diff_runs(a, b)
+
+
+def test_replay_cli_main(spooled, capsys):
+    """Drive the CLI entry point in-process: list, show, diff."""
+    from repro.sim.trace.replay import main
+    root, _, _, _ = spooled
+    assert main(["list", str(root)]) == 0
+    shown = capsys.readouterr().out
+    assert "bfc" in shown and "occ+pause+flow+kernel" in shown
+    assert main(["show", str(root), "bfc", "--end", "256"]) == 0
+    shown = capsys.readouterr().out
+    assert "occupancy peak" in shown and "ticks [0, 256)" in shown
+    assert main(["diff", str(root), "bfc", "dcqcn",
+                 "--expect", "diverge"]) == 0
+    assert "first divergence at tick" in capsys.readouterr().out
+    assert main(["diff", str(root), "bfc", "bfc", "--expect", "same"]) == 0
+    capsys.readouterr()
+    # --expect mismatches exit non-zero (the CI guard contract)
+    assert main(["diff", str(root), "bfc", "dcqcn",
+                 "--expect", "same"]) == 1
+    capsys.readouterr()
+
+
+# ---- BoundedLog (satellite: one reader protocol, three logs) ----------------
+
+def test_bounded_log_mark_since():
+    log = dispatch.BoundedLog(4)
+    for i in range(3):
+        log.append(i)
+    m = log.mark()
+    log.append(3)
+    log.append(4)                      # trims entry 0
+    assert list(log) == [1, 2, 3, 4] and log.maxlen == 4
+    assert log.since(m) == [3, 4]      # absolute marks survive trimming
+    # a mark whose whole window was trimmed yields the surviving suffix
+    for i in range(5, 11):
+        log.append(i)
+    assert log.since(m) == list(log)
+    assert log.since(log.mark()) == []
+
+
+def test_exec_logs_are_bounded():
+    assert isinstance(dispatch.ACTIVE_LOG, dispatch.BoundedLog)
+    assert isinstance(dispatch.TIMING_LOG, dispatch.BoundedLog)
+    assert isinstance(dispatch.TRACE_LOG, dispatch.BoundedLog)
+    assert dispatch.TRACE_LOG.maxlen < dispatch.ACTIVE_LOG.maxlen
+
+
+# ---- write_bench satellites -------------------------------------------------
+
+def test_write_bench_caps_trajectory(tmp_path):
+    path = tmp_path / "BENCH_sweep.json"
+    for i in range(TRAJECTORY_CAP + 7):
+        store = RunStore(tmp_path / f"r{i}", run_id=f"run{i}")
+        store.record_scenario("scn", wall_s=1.0, grid_points=2,
+                              xla_compilations=1, device_count=1)
+        store.write_bench(path)
+    data = json.loads(path.read_text())
+    hist = data["trajectory"]["scn"]
+    assert len(hist) == TRAJECTORY_CAP
+    # the cap keeps the MOST RECENT entries
+    assert hist[-1]["run_id"] == f"run{TRAJECTORY_CAP + 6}"
+    assert hist[0]["run_id"] == "run7"
+    assert data["scenarios"]["scn"]["grid_points"] == 2
+
+
+def test_write_bench_warns_on_unreadable_prior(tmp_path):
+    path = tmp_path / "BENCH_sweep.json"
+    path.write_text("{not json")
+    store = RunStore(tmp_path / "s", run_id="r")
+    store.record_scenario("scn", wall_s=1.0, grid_points=1,
+                          xla_compilations=1, device_count=1)
+    with pytest.warns(UserWarning, match="unreadable prior bench file"):
+        store.write_bench(path)
+    data = json.loads(path.read_text())     # fresh trajectory written
+    assert len(data["trajectory"]["scn"]) == 1
