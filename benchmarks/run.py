@@ -124,6 +124,12 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
         grid_points += len(results)
         for r in results:
             emit_fct_table(r.label.replace("/", "_"), r.metrics)
+            # grids with a centralized-oracle lane (protocol_zoo) report
+            # each case's tail-latency distance from optimal
+            if (r.metrics is not None
+                    and r.metrics.distance_from_optimal is not None):
+                emit(r.label.replace("/", "_"), "distance_from_optimal",
+                     round(r.metrics.distance_from_optimal, 3))
         plan = exec_.last_plan()
         # active-horizon profile, aggregated over every protocol group the
         # scenario dispatched (one ACTIVE_LOG entry per execute call)

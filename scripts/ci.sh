@@ -21,12 +21,14 @@ exec_tests() {
 
 case "${1:-tier1}" in
   tier1) python scripts/gen_scenario_docs.py --check
+         python scripts/gen_golden_traces.py --check
          python scripts/trace_guard.py
          exec_tests
          exec python -m pytest -x -q -m "not slow" \
               --ignore=tests/test_sim_exec.py ;;
   slow)  exec python -m pytest -q -m "slow" ;;
   all)   python scripts/gen_scenario_docs.py --check
+         python scripts/gen_golden_traces.py --check
          python scripts/trace_guard.py
          exec_tests
          exec python -m pytest -x -q --ignore=tests/test_sim_exec.py ;;

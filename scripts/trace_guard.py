@@ -29,11 +29,17 @@ protocol, leaves the legacy emit columns and every state leaf untouched,
 spools channels through a RunStore that match a flat-scan traced
 reference bit-for-bit (the early-exit tail reconstruction under
 tracing), and `python -m repro.sim.replay diff` on two spooled protocol
-variants reports the correct first-divergence tick. It is the cheap
-canary scripts/ci.sh runs on every tier-1 invocation; the full
-bit-identity matrix lives in tests/test_sim_topo_sweep.py,
-tests/test_sim_exec.py, tests/test_sim_active_horizon.py, and
-tests/test_sim_trace.py."""
+variants reports the correct first-divergence tick. A sixth pass pushes
+the ENTIRE protocol zoo — every `config.PRESETS` family — through ONE
+mixed all-family `run_grid` call on the same 4-lane mixed-latency grid
+and asserts exactly one compilation per variant (the BFC group must be a
+pure cache HIT on part 1's program, so the total is len(PRESETS) - 1)
+and serial `engine.run` bit-identity for the zoo's new families (SFC,
+FairQ, oracle). It is the cheap canary scripts/ci.sh runs on every
+tier-1 invocation; the full bit-identity matrix lives in
+tests/test_sim_topo_sweep.py, tests/test_sim_exec.py,
+tests/test_sim_active_horizon.py, tests/test_sim_trace.py, and
+tests/test_golden_traces.py."""
 import os
 import sys
 
@@ -298,6 +304,50 @@ def main() -> None:
               f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
         sys.exit(1)
 
+    # 6) the protocol zoo: every PRESETS family on the SAME 4-lane
+    # mixed-latency grid through one run_grid call. Grouping is by
+    # engine.static_cfg, so the compile count must be exactly one per
+    # variant — and the BFC group must be a pure cache hit on the program
+    # part 1 built (same lanes, same n_ticks), proving a new family can
+    # never fragment an existing family's cache. The zoo's new families
+    # (SFC source signaling, FairQ rate control, the SRPT-NIC oracle)
+    # are additionally checked bit-for-bit against their own serial
+    # engine.run on fabric 0.
+    from repro.sim.config import PRESETS
+    zoo_cases = [(f"zoo_{name}_{label}", dataclasses.replace(cfg, proto=p),
+                  flows)
+                 for name, p in sorted(PRESETS.items())
+                 for (label, cfg, flows) in cases]
+    before = engine.trace_count()
+    zoo_results = sweep.run_grid(topology.build_cached(fabrics[0]),
+                                 zoo_cases, n_ticks=512, summarize=False)
+    zoo_traces = engine.trace_count() - before
+    if zoo_traces != len(PRESETS) - 1:
+        print(f"TRACE GUARD FAILED: the {len(PRESETS)}-family zoo grid "
+              f"({len(zoo_cases)} lanes) compiled {zoo_traces}x (expected "
+              f"exactly {len(PRESETS) - 1}: one program per protocol "
+              "variant, with the BFC group a cache hit on part 1's "
+              "program). A ProtoConfig field is missing from — or a "
+              "fabric attribute is leaking into — engine.static_cfg.")
+        sys.exit(1)
+    by_label = {r.label: r for r in zoo_results}
+    for name in ("sfc", "fairq", "oracle"):
+        label, cfg, flows = cases[0]           # fabric 0, seed 1
+        r = by_label[f"zoo_{name}_{label}"]
+        zcfg = dataclasses.replace(cfg, proto=PRESETS[name])
+        t0 = topology.build_cached(zcfg.clos)
+        st_s, em_s = engine.run(t0, flows, zcfg, 512)
+        ok_em = np.array_equal(r.emits, em_s)
+        st_s = sweep.trim_state(st_s, flows.n_flows, TopoDims.of(t0))
+        bad = [n for n in st_s._fields
+               if not np.array_equal(np.asarray(getattr(r.state, n)),
+                                     np.asarray(getattr(st_s, n)))]
+        if not ok_em or bad:
+            print(f"TRACE GUARD FAILED: zoo family {name} diverges from "
+                  f"its serial run (emits ok={ok_em}, state leaves "
+                  f"{bad}) — the new family's law is not batch-invariant.")
+            sys.exit(1)
+
     print(f"trace guard ok: {len(cases)} grid points "
           f"(2 topologies x 2 link latencies x 2 seeds, bit-identical to "
           f"serial) on {plan.n_devices} device(s), "
@@ -310,7 +360,9 @@ def main() -> None:
           f"to lax; trace capture: off-spec {off_traces} extra traces, "
           f"traced grid {t_traces} trace with {lay.width} channels "
           f"bit-identical to flat + spool round-trip, replay diff at "
-          f"tick {expect_tick}")
+          f"tick {expect_tick}; protocol zoo: {len(PRESETS)} families x "
+          f"{len(cases)} lanes in one grid call, {zoo_traces} traces "
+          f"(BFC a cache hit), sfc/fairq/oracle bit-identical to serial")
 
 
 if __name__ == "__main__":

@@ -43,9 +43,20 @@ class ProtoConfig:
     backpressure: bool = True       # per-flow pause/resume via Bloom frames
     resume_limit: bool = True       # <=1 resume per tau per queue (buffer opt)
     scheduler: str = "drr"          # 'drr' | 'srf'
-    cc: str = "none"                # 'none'|'fixed'|'dctcp'|'dcqcn'|'hpcc'
+    cc: str = "none"          # 'none'|'fixed'|'dctcp'|'dcqcn'|'hpcc'|'fairq'
     ecn: bool = False
     pfc: bool = False
+    # SFC (arXiv 2305.00538): switches signal congestion straight back to
+    # the sending NIC, which pauses the flow for the queue's drain time --
+    # the signal travels only the hops between source and the congested
+    # switch, far less than an e2e RTT.
+    source_signal: bool = False
+    sfc_threshold: int = 100        # egress occupancy (pkts) that signals
+    sfc_max_pause: int = 256        # cap on one signal's pause (ticks)
+    # NIC flow scheduling: 'drr' (deficit round-robin, every realizable
+    # scheme) | 'srpt' (omniscient shortest-remaining-first -- the
+    # centralized-scheduler oracle, arXiv 1710.02548)
+    nic_sched: str = "drr"
     window_init: float = 100.0      # pkts; flows start at line rate (1 BDP)
     infinite_buffer: bool = False
     # Switch-decision implementation: 'lax' (inline phase pipeline),
@@ -65,6 +76,11 @@ class ProtoConfig:
     dcqcn_timer: int = 300
     hpcc_eta: float = 0.95
     hpcc_wai: float = 0.5
+    # FairQ (arXiv 2401.04850): rate-based fair allocation -- switches
+    # report the bottleneck's active-flow count, sources jump down to the
+    # fair share immediately and EWMA up toward it otherwise.
+    fairq_g: float = 0.25           # EWMA gain toward the fair share
+    fairq_rate_min: float = 1e-3    # pkts/tick floor
     pfc_frac: float = 0.11          # of free buffer
 
 
@@ -90,10 +106,27 @@ IDEAL_FQ = ProtoConfig(name="ideal_fq", n_queues=64, dynamic_queues=True,
                        backpressure=False, cc="fixed", queue_cap=192,
                        infinite_buffer=True)
 IDEAL_SRF = replace(IDEAL_FQ, name="ideal_srf", scheduler="srf")
+# ---- post-BFC literature (protocol zoo) -------------------------------------
+# SFC: per-flow pause signals from the congested switch straight to the
+# sending NIC (no windows, no per-hop backpressure state in the fabric).
+SFC = ProtoConfig(name="sfc", n_queues=1, dynamic_queues=False,
+                  backpressure=False, source_signal=True, pfc=True,
+                  queue_cap=2048)
+# FairQ: explicit fair-share rate feedback; rate-limited NIC like DCQCN but
+# driven by bottleneck flow counts instead of ECN marks.
+FAIRQ = ProtoConfig(name="fairq", n_queues=1, dynamic_queues=False,
+                    backpressure=False, cc="fairq", pfc=True,
+                    queue_cap=2048)
+# Centralized-scheduler oracle: Ideal-SRF fabric (per-flow queues, infinite
+# buffer, shortest-remaining-first at switches) plus an omniscient SRPT
+# scheduler at every NIC -- the lower bound every realizable scheme's FCT
+# is measured against (metrics.distance_from_optimal).
+ORACLE = replace(IDEAL_SRF, name="oracle", nic_sched="srpt")
 
 PRESETS = {p.name: p for p in
            [BFC, BFC_SRF, BFC_DEST, BFC_STOCHASTIC, BFC_NO_BUFOPT, BFC_PFC,
-            PFC_ONLY, DCTCP, DCQCN, HPCC, HPCC_SFQ, IDEAL_FQ, IDEAL_SRF]}
+            PFC_ONLY, DCTCP, DCQCN, HPCC, HPCC_SFQ, IDEAL_FQ, IDEAL_SRF,
+            SFC, FAIRQ, ORACLE]}
 
 
 @dataclass(frozen=True)

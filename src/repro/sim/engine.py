@@ -154,8 +154,12 @@ class SimState(NamedTuple):
     # feedback rings
     ack_ring: jnp.ndarray      # (RING, F) i32
     mark_ring: jnp.ndarray     # (RING, F) i32
-    u_ring: jnp.ndarray        # (RING, F) f32 (HPCC max path util)
+    u_ring: jnp.ndarray        # (RING, F) f32 (HPCC max path util /
+    #                            FairQ bottleneck flow count)
     retx_ring: jnp.ndarray     # (RRING, F) i32 (delayed retransmit credits)
+    # SFC source signalling (inert zeros unless proto.source_signal)
+    sfc_ring: jnp.ndarray      # (RING, F) i32 in-flight pause signals
+    sfc_until: jnp.ndarray     # (F,) source paused until this tick
     # NIC scheduling
     nic_ptr: jnp.ndarray       # (NSRV,)
     # flow hash table occupancy model
@@ -219,6 +223,7 @@ def make_step(dims: TopoDims, cfg: SimConfig, n_flows: int):
             ack_ring=z((RING, F)), mark_ring=z((RING, F)),
             u_ring=jnp.zeros((RING, F), jnp.float32),
             retx_ring=z((RRING, F)),
+            sfc_ring=z((RING, F)), sfc_until=z((F,)),
             nic_ptr=z((NSRV,)),
             bucket_cnt=z((NSW, cfg.ft_buckets)),
             stat_drops=jnp.int32(0), stat_collisions=jnp.int32(0),
@@ -282,7 +287,11 @@ def quiescent(st: SimState, ops: FlowOperands) -> jnp.ndarray:
                  & jnp.all(st.ack_ring == 0)
                  & jnp.all(st.mark_ring == 0)
                  & jnp.all(st.u_ring == 0.0)
-                 & jnp.all(st.retx_ring == 0))
+                 & jnp.all(st.retx_ring == 0)
+                 & jnp.all(st.sfc_ring == 0))
+    # (st.sfc_until needs no clause: with every flow done and the signal
+    # ring drained, a stale pause deadline can never gate anything again,
+    # and the tail replay leaves it untouched -- exactly like the flat scan)
     signals_clear = (jnp.all(st.pl_tail == st.pl_head)
                      & jnp.all(st.bloom_counts == 0)
                      & ~jnp.any(st.bloom_mid) & ~jnp.any(st.bloom_rx)
@@ -324,8 +333,9 @@ def _finish_tail(env, st: SimState, emits, topo_ops, n_ticks: int,
         tx_ewma, tokens, v = c
         # switch_tx: can_tx is all-False -> pure EWMA decay on every port
         tx_ewma = tx_ewma * (1 - 1 / 32)
-        # nic_tx: DCQCN token-bucket refill continues until the 2.0 cap
-        if pc.cc == "dcqcn":
+        # nic_tx: the rate-limited NICs (DCQCN, FairQ) keep refilling
+        # their token bucket until the 2.0 cap
+        if pc.cc in ("dcqcn", "fairq"):
             tokens = jnp.minimum(tokens + v.rate, 2.0)
         # feedback: drained rings are all zeros
         v = phases.cc_laws(pc, tm, v, zero_i, zero_i, zero_f)

@@ -38,6 +38,10 @@ class RunMetrics:
     allocs: int
     overflow: int
     pauses: int
+    # tail-latency ratio vs the centralized-scheduler oracle on the same
+    # lane (flows + fabric); 1.0 for the oracle itself. None until
+    # `distance_from_optimal` annotates a grid containing an oracle case.
+    distance_from_optimal: Optional[float] = None
     slowdowns: np.ndarray = field(repr=False, default=None)
     sizes: np.ndarray = field(repr=False, default=None)
     occ_hist: np.ndarray = field(repr=False, default=None)
@@ -108,6 +112,43 @@ def summarize(name: str, state, emits: np.ndarray, flows: FlowSet,
         qlen_hist=np.asarray(state.qlen_hist),
         flows_hist=np.asarray(state.flows_hist),
     )
+
+
+# protocol name of the centralized-scheduler reference (config.ORACLE)
+ORACLE_PROTO = "oracle"
+
+
+def distance_from_optimal(results, oracle_proto: str = ORACLE_PROTO,
+                          pct: str = "p99") -> Dict[str, float]:
+    """Annotate a grid's RunMetrics with each case's distance from the
+    centralized-scheduler oracle (arXiv 1710.02548): the ratio of its
+    FCT-slowdown percentile to the oracle case run on the IDENTICAL lane —
+    same FlowSet object (scenario grids share one generated workload
+    across protocol variants) and therefore the same fabric, load, and
+    seed. Cases on lanes without an oracle run are left un-annotated.
+    Mutates `r.metrics.distance_from_optimal` in place and returns
+    {label: ratio} for the annotated cases; the oracle's own ratio is
+    exactly 1.0."""
+    groups: Dict[int, list] = {}
+    for r in results:
+        groups.setdefault(id(r.flows), []).append(r)
+    attr = f"fct_slowdown_{pct}"
+    out: Dict[str, float] = {}
+    for rs in groups.values():
+        oracle = next((r for r in rs if r.proto == oracle_proto
+                       and r.metrics is not None), None)
+        if oracle is None:
+            continue
+        ref = float(getattr(oracle.metrics, attr))
+        for r in rs:
+            if r.metrics is None:
+                continue
+            val = float(getattr(r.metrics, attr))
+            ratio = (val / ref if ref > 0 and np.isfinite(ref)
+                     and np.isfinite(val) else float("nan"))
+            r.metrics.distance_from_optimal = ratio
+            out[r.label] = ratio
+    return out
 
 
 def throughput_timeline(emits: np.ndarray, window: int = 1250) -> np.ndarray:
@@ -216,7 +257,9 @@ def format_report(m: RunMetrics) -> str:
         f"== {m.name} ==",
         f"  completed {m.completed}/{m.total}  "
         f"slowdown avg={m.fct_slowdown_avg:.2f} p50={m.fct_slowdown_p50:.2f} "
-        f"p95={m.fct_slowdown_p95:.2f} p99={m.fct_slowdown_p99:.2f}",
+        f"p95={m.fct_slowdown_p95:.2f} p99={m.fct_slowdown_p99:.2f}"
+        + (f" dist_opt={m.distance_from_optimal:.2f}"
+           if m.distance_from_optimal is not None else ""),
         f"  buffer p99={m.buffer_p99_pkts:.0f}pkts max={m.buffer_max_pkts} "
         f"pfc={m.pfc_pause_frac * 100:.3f}% drops={m.drops} "
         f"pauses={m.pauses}",

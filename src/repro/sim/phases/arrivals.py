@@ -2,7 +2,8 @@
 
 Writes this tick's transmissions onto the wires, reads the packets whose
 propagation delay expires now, then processes every arrival in parallel:
-deliveries schedule delayed feedback (ACK / ECN echo / HPCC INT); switch
+deliveries schedule delayed feedback (ACK / ECN echo / HPCC INT / FairQ
+bottleneck flow counts); switch
 arrivals pass the shared-buffer admission check, get a queue (existing
 assignment, else dynamic first-free / stochastic hash), are ECN-marked,
 enqueued, and may trigger a BFC pause when their queue crosses the dynamic
@@ -22,6 +23,7 @@ bit-identical to the former five-sort formulation. `SORTS_PER_TICK`
 documents the count for the benchmark reports."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ...core import bloom
@@ -88,6 +90,21 @@ def arrivals(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
         hop_util = jnp.where(rp >= 0, hop_util, 0.0)
         u_path = hop_util.max(axis=1)
         u_ring = u_ring.at[fb_slot, fb_f].max(u_path)
+    elif pc.cc == "fairq":
+        # FairQ: the delivery echoes the max active-flow count over the
+        # path's links (NIC uplink included -- hop 0's port), i.e. the
+        # bottleneck's fair-share denominator. "Active" is the switches'
+        # ledger view: arrived, not yet completed; phantom flows never
+        # arrive, so padded runs count identically.
+        active_f = (ops.arrival <= t) & (st.done < 0)            # (F,)
+        per_port = jax.ops.segment_sum(
+            (active_f[:, None] & (ops.routes >= 0)).astype(I32).reshape(-1),
+            jnp.maximum(ops.routes, 0).reshape(-1), num_segments=P)
+        rp = ops.routes[a_f]                                     # (P, H)
+        hop_n = jnp.where(rp >= 0,
+                          per_port[jnp.maximum(rp, 0)]
+                          .astype(jnp.float32), 0.0)
+        u_ring = u_ring.at[fb_slot, fb_f].max(hop_n.max(axis=1))
 
     # switch arrivals ---------------------------------------------------------
     sw_arr = jnp.maximum(topo.port_switch[p_arr], 0)  # target switch

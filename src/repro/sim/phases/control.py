@@ -1,4 +1,4 @@
-"""Phase 1: tau-boundary control work (paper §3.3).
+"""Phase 1: tau-boundary control work (paper §3.3) + SFC signalling.
 
 Pops at most one to-be-resumed flow per (port, queue) per tau from the
 resume ring (the paper's buffer optimization; disabled by the
@@ -9,7 +9,19 @@ frame propagation delay).
 
 The resume gate compares occupancy against `ctx.th` — on the kernelized
 switch path (`ProtoConfig.kernel_impl`) that threshold comes from the
-fused Pallas step `derive` ran, bit-identical to the inline lax ceil."""
+fused Pallas step `derive` ran, bit-identical to the inline lax ceil.
+
+With `proto.source_signal` (SFC, arXiv 2305.00538) this phase also runs
+the switches' control plane for source flow control: every tau, each
+switch scans its egress queues and, for every flow with packets queued at
+an egress port whose occupancy exceeds `sfc_threshold`, launches a pause
+signal straight back to that flow's sending NIC. The signal carries the
+port's drain time (occupancy in ticks, capped at `sfc_max_pause`) and
+rides the `sfc_ring` delay line for `hop * prop_ticks + 1` ticks — the
+wire distance from the congested switch back to the source, which for a
+first-hop ToR is a couple of ticks instead of an end-to-end RTT. The
+`feedback` phase lands signals (max-combining concurrent ones) into
+`sfc_until`; `nic_tx` gates eligibility on it."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -60,6 +72,24 @@ def control(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
         bloom_mid = jnp.where(is_tau, bloom.snapshot(bloom_counts),
                               bloom_mid)
 
+    # SFC: near-source pause signalling (see module docstring)
+    sfc_ring, n_sfc = st.sfc_ring, jnp.int32(0)
+    if pc.source_signal:
+        H = env.H
+        f_ar = jnp.arange(F)
+        ports = jnp.maximum(ops.routes, 0)                       # (F, H)
+        pocc = ctx.port_occ[ports]                               # (F, H)
+        congested = (is_tau & (st.f_cnt > 0) & (ops.routes >= 0)
+                     & (pocc > pc.sfc_threshold))                # (F, H)
+        dur = jnp.clip(pocc, 1, pc.sfc_max_pause)                # (F, H)
+        # upstream wire distance: hop h's switch is h links from the NIC
+        delay = jnp.arange(H, dtype=I32) * topo.prop_ticks + 1   # (H,)
+        slot = (ctx.t + delay) % env.RING                        # (H,)
+        sfc_ring = sfc_ring.at[
+            jnp.broadcast_to(slot[None, :], (F, H)),
+            jnp.where(congested, f_ar[:, None], F)].max(dur)
+        n_sfc = congested.sum().astype(I32)
+
     return ctx._replace(bloom_counts=bloom_counts, bloom_mid=bloom_mid,
                         bloom_rx=bloom_rx, pl=pl, pl_head=pl_head,
-                        f_paused=f_paused)
+                        f_paused=f_paused, sfc_ring=sfc_ring, n_sfc=n_sfc)

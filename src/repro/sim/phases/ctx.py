@@ -111,6 +111,9 @@ class StepCtx(NamedTuple):
     pl: Optional[jnp.ndarray] = None
     pl_head: Optional[jnp.ndarray] = None
     f_paused: Optional[jnp.ndarray] = None
+    sfc_ring: Optional[jnp.ndarray] = None     # (RING, F) + this tick's
+    #                                            signals (SFC source pause)
+    n_sfc: Optional[jnp.ndarray] = None        # () i32 signals sent now
     # -- phase 2 (switch_tx) -------------------------------------------------
     can_tx: Optional[jnp.ndarray] = None       # (P,)
     sel_q: Optional[jnp.ndarray] = None        # (P,) picked queue (garbage
@@ -164,6 +167,7 @@ class StepCtx(NamedTuple):
     mark_seen: Optional[jnp.ndarray] = None
     cc_timer: Optional[jnp.ndarray] = None
     since_dec: Optional[jnp.ndarray] = None
+    sfc_until: Optional[jnp.ndarray] = None    # (F,) post-landing deadline
 
 
 def rank_same_key(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:

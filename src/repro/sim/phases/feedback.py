@@ -3,9 +3,14 @@
 Drains this tick's row of the delayed feedback rings (ACKs, ECN echoes,
 HPCC max-path-utilization, retransmit credits) and applies the configured
 end-host law: DCTCP's alpha-EWMA window cut, HPCC's reference-window
-utilization rule, or DCQCN's rate decrease / additive-increase timers.
-BFC itself needs none of this (cc='none'): the phase then only books ACKs
-and replays dropped packets.
+utilization rule, DCQCN's rate decrease / additive-increase timers, or
+FairQ's fair-share rate chase (the `u_ring` then carries the bottleneck's
+active-flow count instead of HPCC's path utilization: the rate jumps down
+to `1/n` immediately and EWMAs up toward it otherwise). BFC itself needs
+none of this (cc='none'): the phase then only books ACKs and replays
+dropped packets. Under `proto.source_signal` (SFC) the phase additionally
+lands this tick's row of the `sfc_ring` pause-signal delay line into the
+per-flow `sfc_until` deadline that gates `nic_tx`.
 
 The feedback rings are delay lines of static length `env.RING`
 (= `MAX_HOPS * dims.prop_max + 2`, the worst case over a batch's lanes):
@@ -103,6 +108,21 @@ def cc_laws(pc, tm, v: CCVars, acks_now, marks_now, u_now) -> CCVars:
         mark_seen = jnp.where(epoch, 0, mark_seen)
         ack_seen = jnp.where(epoch, 0, ack_seen)
         cc_timer = jnp.where(epoch, tm.e2e_rtt_ticks, cc_timer)
+    elif pc.cc == "fairq":
+        # u_now = max active-flow count over the path's links when the
+        # delivered packet left; the fair share there is 1/n. Decreases
+        # take effect immediately ("fast"), increases chase the share
+        # with gain fairq_g ("fair") -- and with zero feedback (the
+        # quiescent-tail replay) every op below is the identity, so the
+        # early-exit runner stays bit-identical for free.
+        has_fb = acks_now > 0
+        share = jnp.clip(1.0 / jnp.maximum(u_now, 1.0),
+                         pc.fairq_rate_min, 1.0)
+        rate = jnp.where(has_fb,
+                         jnp.where(share < rate, share,
+                                   rate + pc.fairq_g * (share - rate)),
+                         rate)
+        rate = jnp.clip(rate, pc.fairq_rate_min, 1.0)
 
     return CCVars(cwnd=cwnd, cwnd_ref=cwnd_ref, rate=rate,
                   rate_target=rate_target, alpha=alpha, ack_seen=ack_seen,
@@ -132,10 +152,19 @@ def feedback(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
 
     v = cc_laws(pc, tm, CCVars.of_state(st), acks_now, marks_now, u_now)
 
+    # SFC: land this tick's pause signals at the sources (max-combine)
+    sfc_ring, sfc_until = ctx.sfc_ring, st.sfc_until
+    if pc.source_signal:
+        sig = sfc_ring[row]
+        sfc_ring = sfc_ring.at[row].set(0)
+        sfc_until = jnp.where(sig > 0,
+                              jnp.maximum(sfc_until, t + sig), sfc_until)
+
     return ctx._replace(ack_ring=ack_ring, mark_ring=mark_ring,
                         u_ring=u_ring, retx_ring=retx_ring, acked=acked,
                         rem_src=rem_src, sent=sent, cwnd=v.cwnd,
                         cwnd_ref=v.cwnd_ref, alpha=v.alpha,
                         ack_seen=v.ack_seen, mark_seen=v.mark_seen,
                         cc_timer=v.cc_timer, rate=v.rate,
-                        rate_target=v.rate_target, since_dec=v.since_dec)
+                        rate_target=v.rate_target, since_dec=v.since_dec,
+                        sfc_ring=sfc_ring, sfc_until=sfc_until)

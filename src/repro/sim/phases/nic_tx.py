@@ -2,9 +2,15 @@
 
 Each server runs deficit round-robin over its eligible flows (started, has
 work, not completed, not paused by the first-hop Bloom snapshot, not PFC
-paused, within its congestion window / rate-limiter budget) and transmits
-at most one packet per tick. Scores are packed into a per-server
-segment-min; padding-invariant because phantom flows are never eligible."""
+paused, not SFC-paused past `sfc_until`, within its congestion window /
+rate-limiter budget) and transmits at most one packet per tick. Scores are
+packed into a per-server segment-min; padding-invariant because phantom
+flows are never eligible.
+
+The centralized-scheduler oracle (`proto.nic_sched == 'srpt'`) replaces
+the DRR score with omniscient shortest-remaining-processing-time: two
+chained segment-mins (min remaining size, then min flow index among the
+tied) so the key never overflows int32 at any padded flow count."""
 from __future__ import annotations
 
 import jax
@@ -19,7 +25,7 @@ def nic_tx(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
     F, NSRV, S = env.F, env.NSRV, env.S
     s_ar = jnp.arange(S)
     win_proto = pc.cc in ("dctcp", "hpcc", "fixed")
-    rate_proto = pc.cc == "dcqcn"
+    rate_proto = pc.cc in ("dcqcn", "fairq")
 
     rem_src = ctx.rem_src
     started = ops.arrival <= ctx.t
@@ -31,25 +37,45 @@ def nic_tx(env: PhaseEnv, st, ops, topo, ctx: StepCtx) -> StepCtx:
     else:
         nic_paused = jnp.zeros((F,), bool)
     elig_f = avail & ~nic_paused & ~ctx.pfc_paused[ops.routes[:, 0]]
+    if pc.source_signal:
+        elig_f &= ctx.t >= st.sfc_until
     if win_proto:
         elig_f &= (st.sent - st.acked) < st.cwnd.astype(I32)
     tokens = st.tokens
     if rate_proto:
         tokens = jnp.minimum(tokens + st.rate, 2.0)
         elig_f &= tokens >= 1.0
-    # per-server DRR over flows (packed segment-min; F*F must fit int32)
     f_ar = jnp.arange(F)
-    score = (f_ar - st.nic_ptr[ops.src]) % F
-    packed_f = jnp.where(elig_f, score * F + f_ar,
-                         jnp.iinfo(np.int32).max)
-    best_f = jax.ops.segment_min(packed_f, ops.src, num_segments=NSRV)
-    nic_can_tx = best_f < jnp.iinfo(np.int32).max
-    nic_sel = jnp.where(nic_can_tx, best_f % F, 0).astype(I32)
+    max32 = jnp.iinfo(np.int32).max
+    if pc.nic_sched == "srpt":
+        # centralized oracle: shortest remaining size first, flow index
+        # breaking ties (two segment-mins -- a packed size*F + f key
+        # would overflow int32)
+        remaining = jnp.maximum(ops.size - st.delivered, 1)
+        rem_key = jnp.where(elig_f, remaining, max32)
+        best_rem = jax.ops.segment_min(rem_key, ops.src,
+                                       num_segments=NSRV)
+        is_best = elig_f & (rem_key == best_rem[ops.src])
+        best_f = jax.ops.segment_min(
+            jnp.where(is_best, f_ar, max32), ops.src, num_segments=NSRV)
+        nic_ptr = st.nic_ptr          # DRR pointer unused under SRPT
+    else:
+        # per-server DRR over flows (packed segment-min; F*F must fit
+        # int32)
+        score = (f_ar - st.nic_ptr[ops.src]) % F
+        packed_f = jnp.where(elig_f, score * F + f_ar, max32)
+        best_f = jax.ops.segment_min(packed_f, ops.src,
+                                     num_segments=NSRV)
+        best_f = jnp.where(best_f < max32, best_f % F, max32)
+        nic_ptr = None                # resolved after nic_sel below
+    nic_can_tx = best_f < max32
+    nic_sel = jnp.where(nic_can_tx, best_f, 0).astype(I32)
     rem_src = rem_src.at[nic_sel].add(-nic_can_tx.astype(I32))
     sent = st.sent.at[nic_sel].add(nic_can_tx.astype(I32))
     if rate_proto:
         tokens = tokens.at[nic_sel].add(-nic_can_tx.astype(jnp.float32))
-    nic_ptr = jnp.where(nic_can_tx, nic_sel + 1, st.nic_ptr)
+    if nic_ptr is None:
+        nic_ptr = jnp.where(nic_can_tx, nic_sel + 1, st.nic_ptr)
     tx_ewma = ctx.tx_ewma.at[jnp.arange(NSRV)].add(
         nic_can_tx.astype(jnp.float32) / 32)
 

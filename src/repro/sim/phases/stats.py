@@ -88,13 +88,14 @@ def stats(env: PhaseEnv, st, ops, topo, ctx: StepCtx):
         pfc_paused=ctx.pfc_paused, wire_f=ctx.wire_f,
         wire_hop=ctx.wire_hop, tx_ewma=ctx.tx_ewma, ack_ring=ctx.ack_ring,
         mark_ring=ctx.mark_ring, u_ring=ctx.u_ring,
-        retx_ring=ctx.retx_ring, nic_ptr=ctx.nic_ptr,
+        retx_ring=ctx.retx_ring, sfc_ring=ctx.sfc_ring,
+        sfc_until=ctx.sfc_until, nic_ptr=ctx.nic_ptr,
         bucket_cnt=ctx.bucket_cnt,
         stat_drops=st.stat_drops + ctx.dropped.sum().astype(I32),
         stat_collisions=st.stat_collisions + ctx.collide.sum().astype(I32),
         stat_allocs=st.stat_allocs + ctx.needs_alloc.sum().astype(I32),
         stat_overflow=st.stat_overflow + ctx.overflow_ev,
-        stat_pauses=st.stat_pauses + ctx.n_pauses,
+        stat_pauses=st.stat_pauses + ctx.n_pauses + ctx.n_sfc,
         stat_pfc_ticks=st.stat_pfc_ticks
         + ctx.pfc_paused.sum().astype(I32),
         occ_hist=occ_hist, flows_hist=flows_hist, qlen_hist=qlen_hist,

@@ -38,6 +38,13 @@ Registry:
   cross_dc_latency        Beyond-paper: long-haul link delays paired with
                           60% rack-local cross traffic; does backpressure
                           spare local flows when the far lanes are slow?
+  protocol_zoo            Beyond-paper: every protocol family -- the
+                          paper's roster plus SFC (arXiv 2305.00538),
+                          FairQ (arXiv 2401.04850), and the centralized
+                          SRPT oracle (arXiv 1710.02548) -- head-to-head
+                          on the paper's three workload families; the
+                          oracle lane annotates every case's metrics with
+                          `distance_from_optimal`.
 
 `docs/SCENARIOS.md` is the generated reference table of this registry
 (`scripts/gen_scenario_docs.py`; CI fails if it drifts).
@@ -68,6 +75,9 @@ class Scenario:
     # Surfaced by scripts/gen_scenario_docs.py into docs/SCENARIOS.md.
     paper_ref: str = ""
     workload: str = "fb_hadoop"
+    # optional workload-family axis: each entry becomes its own batch lane
+    # per (topology, load, seed, degree); empty = just `workload`.
+    workloads: Tuple[str, ...] = ()
     protos: Tuple[str, ...] = ("bfc",)
     loads: Tuple[float, ...] = (0.6,)
     seeds: Tuple[int, ...] = (0,)
@@ -91,10 +101,14 @@ class Scenario:
     def degree_axis(self) -> Tuple[int, ...]:
         return self.incast_degrees or (self.incast_degree,)
 
+    def workload_axis(self) -> Tuple[str, ...]:
+        return self.workloads or (self.workload,)
+
     def axes(self) -> Dict[str, int]:
         """Cardinality of every sweep axis (without generating workloads)."""
         return {"protos": len(self.protos), "loads": len(self.loads),
                 "seeds": len(self.seeds), "degrees": len(self.degree_axis()),
+                "workloads": len(self.workload_axis()),
                 "topologies": max(1, len(self.topologies))}
 
     def grid_size(self) -> int:
@@ -117,14 +131,15 @@ class Scenario:
     def flowset(self, topo: Topology, load: float, seed: int,
                 n_flows: Optional[int] = None,
                 incast_degree: Optional[int] = None,
-                long_lived_pkts: Optional[int] = None):
+                long_lived_pkts: Optional[int] = None,
+                workload: Optional[str] = None):
         from .workload import WorkloadParams, generate
         degree = (incast_degree if incast_degree is not None
                   else self.incast_degree)
         total_kb = self.incast_total_kb
         if self.incast_kb_per_flow > 0:
             total_kb = degree * self.incast_kb_per_flow
-        wp = WorkloadParams(workload=self.workload, load=load,
+        wp = WorkloadParams(workload=workload or self.workload, load=load,
                             incast_load=self.incast_load,
                             incast_degree=degree,
                             incast_total_kb=total_kb,
@@ -147,6 +162,7 @@ class Scenario:
         closes = self.topology_axis(topo.params if topo is not None
                                     else None)
         degs = self.degree_axis()
+        wls = self.workload_axis()
         flowsets = {}
         for ci, clos in enumerate(closes):
             t = (topo if topo is not None and clos == topo.params
@@ -154,16 +170,20 @@ class Scenario:
             for l in self.loads:
                 for s in self.seeds:
                     for d in degs:
-                        flowsets[(ci, l, s, d)] = self.flowset(
-                            t, l, s, n_flows, incast_degree=d,
-                            long_lived_pkts=long_lived_pkts)
+                        for w in wls:
+                            flowsets[(ci, l, s, d, w)] = self.flowset(
+                                t, l, s, n_flows, incast_degree=d,
+                                long_lived_pkts=long_lived_pkts,
+                                workload=w)
         out = []
         for p in (protos or self.protos):
-            for (ci, l, s, d), fl in flowsets.items():
+            for (ci, l, s, d, w), fl in flowsets.items():
                 cfg = SimConfig(proto=PRESETS[p], clos=closes[ci])
                 label = f"{self.name}/{p}"
                 if len(closes) > 1:
                     label += f"_{topo_tag(closes[ci])}"
+                if len(wls) > 1:
+                    label += f"_{w}"
                 label += f"_load{int(l * 100)}"
                 if len(degs) > 1:
                     label += f"_deg{d}"
@@ -213,8 +233,11 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
     channel capture for every case of the grid (spooled per segment when
     a `store` is given; see sim/trace/). Returns a list of
     sweep.CaseResult (one per grid point), each carrying per-config
-    SimState, emits, and summarized RunMetrics."""
-    from . import sweep
+    SimState, emits, and summarized RunMetrics. Grids containing the
+    centralized oracle get every lane's metrics annotated with
+    `distance_from_optimal` (the p99 ratio vs the oracle case sharing
+    its workload/fabric/load/seed)."""
+    from . import metrics, sweep
     sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
           else get(name_or_scenario))
     topo = build(clos or ClosParams())
@@ -222,12 +245,15 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
     if trace is not None:
         cases = [(label, replace(cfg, trace=trace), fl)
                  for label, cfg, fl in cases]
-    return sweep.run_grid(topo, cases,
-                          drain=(drain if drain is not None
-                                 else sc.drain_ticks),
-                          unroll=unroll, max_batch_bytes=max_batch_bytes,
-                          devices=devices, auto_budget=auto_budget,
-                          store=store, early_exit=early_exit)
+    results = sweep.run_grid(topo, cases,
+                             drain=(drain if drain is not None
+                                    else sc.drain_ticks),
+                             unroll=unroll, max_batch_bytes=max_batch_bytes,
+                             devices=devices, auto_budget=auto_budget,
+                             store=store, early_exit=early_exit)
+    if any(r.proto == metrics.ORACLE_PROTO for r in results):
+        metrics.distance_from_optimal(results)
+    return results
 
 
 # ---- the paper's grid --------------------------------------------------------
@@ -343,6 +369,20 @@ register(Scenario(
     workload="fb_hadoop", protos=("bfc", "dctcp"),
     loads=(0.6,), seeds=(22,), locality=0.6,
     topologies=tuple(_latency_fabric(p) for p in (12, 32, 64))))
+
+register(Scenario(
+    name="protocol_zoo",
+    description="every protocol family head-to-head -- BFC (+SRF), PFC, "
+                "DCTCP, DCQCN, HPCC (+SFQ), Ideal-FQ, and the post-BFC "
+                "literature: SFC near-source pausing, FairQ fair-rate "
+                "allocation, and the centralized SRPT oracle -- across "
+                "the paper's three workload families; the oracle lane "
+                "gives every case a distance_from_optimal column (one "
+                "compilation per family, workloads ride the batch axis)",
+    workload="google", workloads=("google", "fb_hadoop", "websearch"),
+    protos=("bfc", "bfc_srf", "pfc", "dctcp", "dcqcn", "hpcc", "hpcc_sfq",
+            "sfc", "fairq", "ideal_fq", "oracle"),
+    loads=(0.6,), seeds=(42,)))
 
 register(Scenario(
     name="buffer_sweep",

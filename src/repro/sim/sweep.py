@@ -82,9 +82,10 @@ PAD_MULTIPLE = 64
 _PER_FLOW_AXIS0 = {
     "rem_src", "sent", "acked", "delivered", "done", "cwnd", "cwnd_ref",
     "rate", "rate_target", "tokens", "alpha", "ack_seen", "mark_seen",
-    "cc_timer", "since_dec", "f_q", "f_cnt", "f_paused",
+    "cc_timer", "since_dec", "f_q", "f_cnt", "f_paused", "sfc_until",
 }
-_PER_FLOW_AXIS1 = {"ack_ring", "mark_ring", "u_ring", "retx_ring"}
+_PER_FLOW_AXIS1 = {"ack_ring", "mark_ring", "u_ring", "retx_ring",
+                   "sfc_ring"}
 # ... and the leaves carrying topology axes, trimmed back to a fabric's
 # true port/server/switch counts after a padded multi-topology run.
 _PER_PORT_AXIS0 = {
@@ -99,7 +100,7 @@ _PER_SWITCH_AXIS0 = {"bucket_cnt"}
 # `TopoDims.prop_max`: the wires themselves (axis 1 = PROP_MAX) and the
 # feedback delay lines (axis 0 = MAX_HOPS * prop_max + 2).
 _PER_PROP_AXIS1 = {"wire_f", "wire_hop"}
-_FB_RING_AXIS0 = {"ack_ring", "mark_ring", "u_ring"}
+_FB_RING_AXIS0 = {"ack_ring", "mark_ring", "u_ring", "sfc_ring"}
 
 
 def pad_flowset(flows: FlowSet, f_max: int) -> FlowSet:

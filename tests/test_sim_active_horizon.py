@@ -2,7 +2,8 @@
 must be bit-identical to the flat scan — final state (after trim_state)
 and emits, leaf for leaf — while actually exiting early on drain-dominated
 horizons, across protocol families whose quiescent tails differ (BFC's
-frozen state vs DCTCP/DCQCN/HPCC epoch timers and DCQCN's token refill)."""
+frozen state vs DCTCP/DCQCN/HPCC epoch timers, DCQCN/FairQ token refill,
+SFC's pause-signal ring, and the oracle's SRPT NIC)."""
 import numpy as np
 import pytest
 
@@ -12,8 +13,8 @@ import jax.numpy as jnp
 
 from repro.sim import engine, sweep, topology, workload
 from repro.sim import exec as exec_
-from repro.sim.config import (BFC, BFC_DEST, DCQCN, DCTCP, HPCC, IDEAL_FQ,
-                              SimConfig)
+from repro.sim.config import (BFC, BFC_DEST, DCQCN, DCTCP, FAIRQ, HPCC,
+                              IDEAL_FQ, ORACLE, SFC, SimConfig)
 from repro.sim.topology import ClosParams, TopoDims
 
 CLOS = ClosParams(n_servers=16, n_tor=2, n_spine=2, switch_buffer_pkts=2048)
@@ -44,7 +45,7 @@ def _run_with_active(topo, flows, cfg, n_ticks, **kw):
 
 
 @pytest.mark.parametrize("proto", [BFC, BFC_DEST, DCTCP, DCQCN, HPCC,
-                                   IDEAL_FQ],
+                                   IDEAL_FQ, SFC, FAIRQ, ORACLE],
                          ids=lambda p: p.name)
 def test_segmented_bit_identical_to_flat_and_exits_early(tiny, proto):
     """The acceptance property per CC family: a drain-dominated horizon

@@ -1,7 +1,8 @@
 """Kernelized switch path: `ProtoConfig.kernel_impl="interpret"` (the
 fused Pallas step body on CPU) must be bit-identical to the inline lax
-phase pipeline — emits and every SimState leaf — across all six protocol
-families, plus the SRF scheduler variant. Also pins the impl-resolution
+phase pipeline — emits and every SimState leaf — across the protocol
+families (including the SRF scheduler variant and the zoo additions:
+SFC source signaling, FairQ rate control, the SRPT-NIC oracle). Also pins the impl-resolution
 contract (`kernels.bfc_step.ops.resolve_impl`): the REPRO_KERNEL /
 REPRO_KERNEL_INTERPRET env overrides, 'auto' fallbacks, and
 `engine.static_cfg` folding the resolved impl into the compile-cache
@@ -19,8 +20,8 @@ import jax.numpy as jnp
 from repro.kernels.bfc_step import ops as kernel_ops
 from repro.kernels.bfc_step import ref as kernel_ref
 from repro.sim import engine, topology, workload
-from repro.sim.config import (BFC, BFC_DEST, BFC_SRF, DCQCN, DCTCP, HPCC,
-                              IDEAL_FQ, SimConfig)
+from repro.sim.config import (BFC, BFC_DEST, BFC_SRF, DCQCN, DCTCP, FAIRQ,
+                              HPCC, IDEAL_FQ, ORACLE, SFC, SimConfig)
 from repro.sim.topology import ClosParams
 
 CLOS = ClosParams(n_servers=8, n_tor=2, n_spine=2, switch_buffer_pkts=512)
@@ -41,7 +42,7 @@ def _assert_states_equal(a, b, label):
 
 
 @pytest.mark.parametrize("proto", [BFC, BFC_SRF, BFC_DEST, DCTCP, DCQCN,
-                                   HPCC, IDEAL_FQ],
+                                   HPCC, IDEAL_FQ, SFC, FAIRQ, ORACLE],
                          ids=lambda p: p.name)
 def test_kernel_path_bit_identical_to_lax(tiny, proto):
     """The acceptance property: routing the per-tick switch decision
