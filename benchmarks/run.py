@@ -5,7 +5,8 @@ entry of the experiment registry (repro.sim.scenarios) through the batched
 sweep subsystem instead of the figure list, records the perf trajectory
 into ``BENCH_sweep.json`` (merge-appended per scenario so it accumulates
 across PRs; ``--bench-json`` to relocate, ``--spool-dir`` to also spool
-per-chunk results), and ends with a one-line per-scenario summary table
+per-chunk results, ``--resume`` to restart an interrupted spooled run
+from its chunk journal), and ends with a one-line per-scenario summary table
 reporting ``active_ticks``/``n_ticks`` from the quiescence early exit.
 ``--no-early-exit`` forces the flat scan; ``--flat-baseline`` times both
 and records the speedup; ``--kernel-impl``/``--kernel-baseline`` pick (or
@@ -26,7 +27,7 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
                   spool_dir: str = "", early_exit: bool = True,
                   flat_baseline: bool = False, kernel_impl: str = "",
                   kernel_baseline: bool = False, trace: bool = False,
-                  **overrides) -> None:
+                  resume: bool = False, **overrides) -> None:
     """Nightly mode: run registry scenarios through the exec-planned
     batched sweep and record the perf trajectory — each scenario reports
     its grid size, wall time, lanes/sec, device count, XLA trace delta
@@ -47,7 +48,11 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
     `TraceSpec.full()` and spools the per-tick channels through the run
     store for `python -m repro.sim.replay`. The run store merge-appends
     it all into `BENCH_sweep.json` and the run ends with a per-scenario
-    summary table plus the total `engine.trace_count()`."""
+    summary table plus the total `engine.trace_count()`. `resume=True`
+    (--resume; requires --spool-dir, where the interrupted run's chunk
+    journal lives) reuses every chunk the interrupted run already spooled
+    and recomputes only the missing/corrupt rest — the merged results are
+    bit-identical to an uninterrupted run (see `exec.resume`)."""
     import contextlib
     import os
     import tempfile
@@ -95,6 +100,9 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
                 g["wall_s"] * 1e6 / max(g["active_ticks_total"], 1), 3)
         return out
 
+    if resume and not spool_dir:
+        raise SystemExit("--resume needs --spool-dir: the interrupted "
+                         "run's chunk journal lives there")
     # records-only runs root the store in a scratch dir: rooting at "."
     # would reattach any stale manifest.json lying in the cwd
     store = exec_.RunStore(spool_dir
@@ -117,7 +125,8 @@ def run_scenarios(which: str, bench_json: str = "BENCH_sweep.json",
         tmark = dispatch.TIMING_LOG.mark()
         with forced_impl(kernel_impl):
             results = run_scenario(name, store=use_store,
-                                   early_exit=early_exit, **overrides)
+                                   early_exit=early_exit, resume=resume,
+                                   **overrides)
         wall = time.time() - t0
         kernel_timing = timing_since(tmark)
         compiles = engine.trace_count() - before
@@ -243,8 +252,18 @@ def main() -> None:
                          "channels through the run store (inspect with "
                          "python -m repro.sim.replay; use --spool-dir to "
                          "choose the store root)")
+    ap.add_argument("--resume", nargs="?", const=True, default=False,
+                    metavar="TAG",
+                    help="resume an interrupted --scenario run from the "
+                         "chunk journal under --spool-dir, recomputing "
+                         "only missing/corrupt chunks (results are "
+                         "bit-identical to an uninterrupted run); the "
+                         "optional TAG names the scenario to resume when "
+                         "--scenario is not given")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
+    if isinstance(args.resume, str) and not args.scenario:
+        args.scenario = args.resume
 
     if args.list_scenarios:
         from . import common  # noqa: F401  (sys.path setup for repro)
@@ -263,7 +282,8 @@ def main() -> None:
                       flat_baseline=args.flat_baseline,
                       kernel_impl=args.kernel_impl,
                       kernel_baseline=args.kernel_baseline,
-                      trace=args.trace, **overrides)
+                      trace=args.trace, resume=bool(args.resume),
+                      **overrides)
         return
 
     from . import paper_figs, micro

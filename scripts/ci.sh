@@ -23,6 +23,7 @@ case "${1:-tier1}" in
   tier1) python scripts/gen_scenario_docs.py --check
          python scripts/gen_golden_traces.py --check
          python scripts/trace_guard.py
+         python scripts/fault_guard.py
          exec_tests
          exec python -m pytest -x -q -m "not slow" \
               --ignore=tests/test_sim_exec.py ;;
@@ -30,6 +31,7 @@ case "${1:-tier1}" in
   all)   python scripts/gen_scenario_docs.py --check
          python scripts/gen_golden_traces.py --check
          python scripts/trace_guard.py
+         python scripts/fault_guard.py
          exec_tests
          exec python -m pytest -x -q --ignore=tests/test_sim_exec.py ;;
   *)     echo "usage: $0 [tier1|slow|all]" >&2; exit 2 ;;

@@ -47,6 +47,9 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 # an ambient byte budget would change the auto plan (and so the guard's
 # expected chunking/sharding) without any code regressing — pin it off
 os.environ.pop("REPRO_EXEC_MAX_BYTES", None)
+# ambient injected faults would trip the zero-retry assertion below (the
+# fault paths get their own gate: scripts/fault_guard.py)
+os.environ.pop("REPRO_FAULTS", None)
 _flags = os.environ.get("XLA_FLAGS", "")
 if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = \
@@ -348,6 +351,22 @@ def main() -> None:
                   f"{bad}) — the new family's law is not batch-invariant.")
             sys.exit(1)
 
+    # 7) the fault-free fast path is really fault-free: with no faults
+    # injected, NO dispatch above took the OOM-retry path (RETRY_LOG
+    # stays empty, the last dispatch reported zero retries) — and the
+    # per-part compile counts already asserted prove recovery machinery
+    # added no re-specializations. The failure paths themselves are
+    # gated by scripts/fault_guard.py.
+    from repro.sim.exec import dispatch as _dispatch
+    n_retries = (exec_.last_timing() or {}).get("retries", 0)
+    if len(_dispatch.RETRY_LOG) != 0 or n_retries != 0:
+        print(f"TRACE GUARD FAILED: a fault-free run exercised the OOM "
+              f"retry path (RETRY_LOG has {len(_dispatch.RETRY_LOG)} "
+              f"entries, last dispatch reported {n_retries} retries) — "
+              "the retry machinery must stay off the fast path unless a "
+              "chunk actually fails.")
+        sys.exit(1)
+
     print(f"trace guard ok: {len(cases)} grid points "
           f"(2 topologies x 2 link latencies x 2 seeds, bit-identical to "
           f"serial) on {plan.n_devices} device(s), "
@@ -362,7 +381,8 @@ def main() -> None:
           f"bit-identical to flat + spool round-trip, replay diff at "
           f"tick {expect_tick}; protocol zoo: {len(PRESETS)} families x "
           f"{len(cases)} lanes in one grid call, {zoo_traces} traces "
-          f"(BFC a cache hit), sfc/fairq/oracle bit-identical to serial")
+          f"(BFC a cache hit), sfc/fairq/oracle bit-identical to serial; "
+          f"0 retries (fault-free fast path untouched)")
 
 
 if __name__ == "__main__":

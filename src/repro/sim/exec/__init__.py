@@ -18,13 +18,24 @@ fast* it runs:
   `sim/trace/`) to disk incrementally and records the perf trajectory as
   `BENCH_sweep.json`.
 
+* `faults`   — deterministic fault injection (`REPRO_FAULTS` /
+  `FaultSpec`) so every failure path above — chunk OOM, crash or kill
+  mid-spool — is a reproducible event in tests and in the
+  `scripts/fault_guard.py` CI gate, plus the structured `ExecError` the
+  dispatcher raises when a chunk's bounded retry budget is spent.
+
 `sweep.run_batch` / `run_grid` / `scenarios.run` route through `plan()` +
-`execute()`; see docs/ARCHITECTURE.md ("The execution layer").
+`execute()`; an interrupted spooled run restarts through `resume()`; see
+docs/ARCHITECTURE.md ("The execution layer", "Fault tolerance & resume").
 """
-from .dispatch import (BoundedLog, execute, lane_sharding,  # noqa: F401
+from .dispatch import (ACTIVE_LOG, BoundedLog, RETRY_LOG,  # noqa: F401
+                       TIMING_LOG, TRACE_LOG, execute, lane_sharding,
                        last_active_ticks, last_plan, last_timing,
-                       last_trace)
-from .planner import (DEFAULT_MEM_FRACTION, ENV_BUDGET, ExecPlan,  # noqa: F401
+                       last_trace, resume)
+from .faults import (ENV_FAULTS, ExecError, FaultInjector,  # noqa: F401
+                     FaultSpec, SimulatedCrash, SimulatedOOM)
+from .planner import (DEFAULT_MEM_FRACTION, DEFAULT_PIPELINE_DEPTH,  # noqa: F401
+                      ENV_BUDGET, ExecPlan, RetryPolicy,
                       auto_budget_bytes, device_free_bytes,
                       host_available_bytes, plan)
-from .store import BENCH_FILENAME, RunStore  # noqa: F401
+from .store import BENCH_FILENAME, TRAJECTORY_CAP, RunStore  # noqa: F401

@@ -32,6 +32,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from .. import engine
 from ..engine import SimState
 from ..trace import TraceLayout, layout as trace_layout, split_emits
+from . import faults
+from .faults import ExecError
 from .planner import ExecPlan
 
 
@@ -100,6 +102,13 @@ LAST_TRACE: Optional[Tuple[np.ndarray, TraceLayout]] = None
 TRACE_LOG_MAX = 64
 TRACE_LOG: BoundedLog = BoundedLog(TRACE_LOG_MAX)
 
+# OOM-adaptive retry provenance: one entry per RESOURCE_EXHAUSTED event
+# the dispatcher recovered from (or gave up on), carrying the chunk, the
+# width it failed at, and the width the retry bisected to. A fault-free
+# run appends NOTHING here — scripts/trace_guard.py asserts the log stays
+# empty (and the compile count unchanged) when no faults are injected.
+RETRY_LOG: BoundedLog = BoundedLog(ACTIVE_LOG_MAX)
+
 
 def last_plan() -> Optional[ExecPlan]:
     return LAST_PLAN
@@ -141,7 +150,8 @@ def _land(st, emits, active, n_real: int
 
 
 def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
-            store=None, tag: str = "run", collect: bool = True):
+            store=None, tag: str = "run", collect: bool = True,
+            resume: bool = False):
     """Run K lanes (workload `flowsets[k]` on fabric `topos[k]`) under one
     protocol config according to `plan`. Returns (batched SimState,
     emits[K, T, 3]) bit-identical to an unchunked single-device
@@ -156,11 +166,26 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
     (requires a store) additionally drops each chunk from host memory once
     spooled and returns None — the streaming mode for grids whose merged
     result would not fit on host (reassemble lazily via
-    `store.load_tag(tag)`)."""
+    `store.load_tag(tag)`).
+
+    Fault tolerance (docs/ARCHITECTURE.md "Fault tolerance & resume"):
+    a chunk whose dispatch or landing raises RESOURCE_EXHAUSTED is re-run
+    in narrower sub-chunks under `plan.retry`'s bounded budget (width
+    bisection + exponential backoff, down to single-lane dispatches)
+    before a structured `ExecError` naming the failing lanes surfaces;
+    every recovery event is journaled in `RETRY_LOG`. With `resume=True`
+    (requires a store; see `resume()`), chunks already journaled by an
+    interrupted run of `tag` — present, content-hash-intact, and matching
+    this plan's lane ranges — are reloaded from disk instead of
+    recomputed, and only the missing/corrupt remainder is dispatched; the
+    merged result is bit-identical to a from-scratch run because lanes are
+    independent and the npz round-trip is exact."""
     global LAST_PLAN, LAST_ACTIVE, LAST_TIMING, LAST_TRACE
     LAST_PLAN = plan
     if not collect and store is None:
         raise ValueError("collect=False discards results: pass a store")
+    if resume and store is None:
+        raise ValueError("resume=True reloads spooled chunks: pass a store")
     from .. import sweep  # deferred: sweep <-> exec call into each other
 
     K = len(flowsets)
@@ -183,47 +208,186 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
     # next to the chunk, and mirror them in TRACE_LOG for in-process reads
     lay = trace_layout(cfg.trace, plan.dims.n_ports, plan.dims.n_switches)
 
-    def dispatch(lo: int):
-        """Stack + (optionally) shard one chunk and launch it. Tail chunks
-        are padded with repeats of lane 0 so every chunk has width W and
-        reuses the one compiled program; padded results are dropped at
-        landing."""
-        fsets = list(flowsets[lo:lo + W])
-        tps = list(topos[lo:lo + W])
-        n_real = len(fsets)
-        fsets += [flowsets[0]] * (W - n_real)
-        tps += [topos[0]] * (W - n_real)
-        ops = sweep.stack_operands(fsets, cfg, plan.f_max)
-        t_ops = sweep.stack_topos(tps, cfg, plan.dims)
+    # the run an interrupted spool left behind, which reused AND
+    # recomputed chunks both land into (None = no prior run: resume
+    # degrades to a plain execute)
+    resume_run = None
+    if resume:
+        runs = store.runs_of(tag)
+        resume_run = runs[-1] if runs else None
+
+    n_retries = 0
+    n_reused = 0
+
+    def _stack(lo: int, n_take: int, width: int):
+        """Operand bundles for lanes [lo, lo+n_take), padded to `width`
+        with repeats of lane 0 (padded results dropped at landing)."""
+        fsets = list(flowsets[lo:lo + n_take])
+        fsets += [flowsets[0]] * (width - n_take)
+        tps = list(topos[lo:lo + n_take])
+        tps += [topos[0]] * (width - n_take)
+        return (sweep.stack_operands(fsets, cfg, plan.f_max),
+                sweep.stack_topos(tps, cfg, plan.dims))
+
+    def launch(lo: int, n_real: int):
+        """Stack + (optionally) shard one planned-width chunk and launch
+        it (async). Tail chunks are padded so every dispatch reuses the
+        one compiled program."""
+        ops, t_ops = _stack(lo, n_real, W)
         if sharding is not None:
             ops = _shard_tree(ops, sharding)
             t_ops = _shard_tree(t_ops, sharding)
-        st, emits, active = go(ops, t_ops)
-        return n_real, st, emits, active
+        return go(ops, t_ops)
+
+    def retry_chunk(idx: int, lo: int, n_real: int,
+                    err: BaseException) -> Tuple:
+        """OOM recovery for one chunk: re-run its lanes in narrower
+        sub-chunks (synchronous, unsharded — correctness over overlap on
+        the recovery path), bisecting the width on every further OOM under
+        `plan.retry`'s budget. Returns the chunk landed to host; raises a
+        structured `ExecError` naming the unlanded lanes when the budget
+        is spent or width-1 still OOMs."""
+        nonlocal n_retries
+        pol = plan.retry
+        w = max(pol.min_width, min(W, n_real) // 2)
+        n_retries += 1
+        RETRY_LOG.append({"tag": tag, "chunk": idx, "event": "oom",
+                          "width": W, "retry_width": w,
+                          "error": str(err)[:200]})
+        states, emit_parts, active_parts = [], [], []
+        off = 0
+        attempt = 0
+        while off < n_real:
+            if pol.backoff_s > 0:
+                time.sleep(pol.backoff_for(attempt))
+            n_take = min(w, n_real - off)
+            try:
+                faults.fire("chunk", idx)
+                st, em, ac = _land(*go(*_stack(lo + off, n_take, w)),
+                                   n_take)
+            except Exception as err2:     # noqa: BLE001 — filtered below
+                if not faults.is_oom(err2):
+                    raise
+                attempt += 1
+                n_retries += 1
+                if w <= pol.min_width or attempt >= pol.max_retries:
+                    RETRY_LOG.append(
+                        {"tag": tag, "chunk": idx, "event": "give_up",
+                         "width": w, "attempt": attempt,
+                         "error": str(err2)[:200]})
+                    raise ExecError(
+                        f"chunk OOM'd at width {w} after {attempt} "
+                        f"retr{'y' if attempt == 1 else 'ies'} "
+                        f"(budget {pol.max_retries}, min width "
+                        f"{pol.min_width})",
+                        tag=tag, chunk=idx, lanes=(lo + off, lo + n_real),
+                        cause=err2) from err2
+                new_w = max(pol.min_width, w // 2)
+                RETRY_LOG.append(
+                    {"tag": tag, "chunk": idx, "event": "bisect",
+                     "width": w, "retry_width": new_w, "attempt": attempt,
+                     "error": str(err2)[:200]})
+                w = new_w
+                continue
+            states.append(st)
+            emit_parts.append(em)
+            active_parts.append(ac)
+            off += n_take
+        merged = SimState(**{
+            name: np.concatenate([np.asarray(getattr(s, name))
+                                  for s in states])
+            for name in SimState._fields})
+        return merged, np.concatenate(emit_parts), \
+            np.concatenate(active_parts)
+
+    def compute(idx: int, lo: int) -> Tuple:
+        """One chunk, launched async on the happy path; an OOM at dispatch
+        (or the injected `oom@chunkN` fault) drops to the synchronous
+        retry path and returns already-landed host arrays."""
+        n_real = min(W, K - lo)
+        try:
+            faults.fire("chunk", idx)
+            return ("inflight", n_real) + tuple(launch(lo, n_real))
+        except Exception as err:          # noqa: BLE001 — filtered below
+            if not faults.is_oom(err):
+                raise
+            return ("landed", n_real) + tuple(retry_chunk(idx, lo, n_real,
+                                                          err))
+
+    def reuse_chunk(idx: int, lo: int):
+        """A verified journaled chunk of the interrupted run, or None when
+        it must be recomputed (absent, quarantined, hash-mismatched, or
+        spooled under a different lane range / horizon / trace layout)."""
+        if resume_run is None:
+            return None
+        n_real = min(W, K - lo)
+        entry = store.find_chunk(tag, resume_run, idx)
+        if entry is None or entry.get("quarantined"):
+            return None
+        reason = store.verify_chunk(entry)
+        if reason is not None:
+            store.quarantine(entry, reason)
+            return None
+        if (entry["lanes"] != n_real or entry.get("lane_lo", lo) != lo
+                or "active_ticks" not in entry):
+            return None
+        st, emits, trace = store.load_chunk_full(entry["path"])
+        emits = np.asarray(emits)
+        if emits.shape[:2] != (n_real, plan.n_ticks):
+            return None
+        if lay.width and (trace is None
+                          or entry.get("trace_channels") != lay.meta()):
+            return None
+        active = np.asarray(entry["active_ticks"], np.int32)
+        return st, emits, (np.asarray(trace) if lay.width else None), active
 
     chunks: List[Tuple[SimState, np.ndarray]] = []
     actives: List[np.ndarray] = []
     traces: List[np.ndarray] = []
     inflight: deque = deque()
 
-    def land_oldest():
-        idx, (n_real, st, emits, active) = inflight.popleft()
-        st, emits, active = _land(st, emits, active, n_real)
+    def land_ready(idx: int, lo: int, st, emits, active, trace=None,
+                   spool: bool = True):
+        """Account one host-side chunk (freshly landed or reloaded) in
+        arrival order; fresh chunks are journaled through the store."""
         actives.append(active)
-        emits, trace = split_emits(emits, lay)
+        if trace is None:
+            emits, trace = split_emits(emits, lay)
         if lay.width:
             traces.append(trace)
-        if store is not None:
+        if spool and store is not None:
             store.spool_chunk(tag, idx, st, emits, active_ticks=active,
                               trace=trace if lay.width else None,
                               trace_channels=lay.meta() if lay.width
-                              else None)
+                              else None,
+                              run=resume_run, lane_lo=lo)
         if collect:
             chunks.append((st, emits))
 
+    def land_oldest():
+        idx, lo, kind, n_real, st, emits, active = inflight.popleft()
+        if kind == "inflight":
+            try:
+                st, emits, active = _land(st, emits, active, n_real)
+            except Exception as err:      # noqa: BLE001 — filtered below
+                if not faults.is_oom(err):
+                    raise
+                # deferred OOM surfacing at readback: same recovery path
+                st, emits, active = retry_chunk(idx, lo, n_real, err)
+        land_ready(idx, lo, st, emits, active)
+
     t0 = time.perf_counter()
     for idx, lo in enumerate(range(0, K, W)):
-        inflight.append((idx, dispatch(lo)))
+        cached = reuse_chunk(idx, lo) if resume else None
+        if cached is not None:
+            # drain in-flight work first so chunks land in index order
+            while inflight:
+                land_oldest()
+            n_reused += 1
+            st_c, em_c, tr_c, ac_c = cached
+            land_ready(idx, lo, st_c, em_c, ac_c, trace=tr_c, spool=False)
+            continue
+        inflight.append((idx, lo) + compute(idx, lo))
         if len(inflight) >= max(1, plan.pipeline_depth):
             land_oldest()
     while inflight:
@@ -249,6 +413,8 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
         "n_ticks": plan.n_ticks,
         "active_ticks_total": active_total,
         "tick_wall_us": wall_s * 1e6 / max(active_total, 1),
+        "retries": n_retries,
+        "chunks_reused": n_reused,
     }
     TIMING_LOG.append(LAST_TIMING)
 
@@ -261,3 +427,20 @@ def execute(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg, *,
                               for st, _ in chunks])
         for name in SimState._fields})
     return merged, np.concatenate([em for _, em in chunks])
+
+
+def resume(plan: ExecPlan, topos: Sequence, flowsets: Sequence, cfg,
+           store, *, tag: str = "run", collect: bool = True):
+    """Resume an interrupted `execute` from its chunk journal: chunks the
+    crashed run already landed (verified by content hash against the
+    RunStore manifest) are reloaded from disk, only the missing or corrupt
+    remainder is recomputed (landing *inside* the same run number, so the
+    repaired run reassembles normally via `store.load_tag`), and the
+    merged (state, emits) is bit-identical to an uninterrupted run —
+    asserted end-to-end by scripts/fault_guard.py. A store with no prior
+    run of `tag` degrades to a plain `execute`. Call with the same plan /
+    operands / config as the interrupted run; chunks journaled under a
+    different lane partition or horizon fail verification and are simply
+    recomputed."""
+    return execute(plan, topos, flowsets, cfg, store=store, tag=tag,
+                   collect=collect, resume=True)

@@ -1,0 +1,198 @@
+"""Deterministic fault injection for the execution tier + its error type.
+
+The dispatcher's failure paths — an OOM'd chunk, a process dying mid-spool
+— are rare in the wild and therefore untested by accident. This module
+makes every one of them a *reproducible* event: ``REPRO_FAULTS`` (or a
+programmatic `install`) arms a list of `FaultSpec`s, and the dispatcher /
+store *fire* named sites as execution passes them. A spec that matches an
+armed site raises the corresponding simulated failure exactly where the
+real one would surface; its count then decrements, so a retried or resumed
+pass runs clean without any test-side cleanup.
+
+Fault-spec grammar (comma-separated, whitespace ignored)::
+
+    SPEC  := KIND '@' SITE INDEX [':' COUNT]
+    KIND  := 'oom'            # RESOURCE_EXHAUSTED at chunk dispatch/landing
+           | 'crash'          # exception mid-spool, AFTER the tmp write but
+                              #   BEFORE the atomic rename (the worst tick
+                              #   for a non-atomic store)
+           | 'kill'           # os._exit(137) at the same point: a hard
+                              #   process death — no finally, no atexit
+    SITE  := 'chunk'          # fired by exec.dispatch per chunk compute
+           | 'spool'          # fired by exec.store inside spool_chunk
+    INDEX := chunk index the fault arms on
+    COUNT := times it fires before disarming (default 1)
+
+Examples: ``oom@chunk2:1`` (one OOM computing chunk 2, the retry runs
+clean), ``crash@spool3`` (die during chunk 3's spool), ``oom@chunk0:99``
+(chunk 0 OOMs until the retry budget is exhausted).
+
+The armed set is process-global (`REPRO_FAULTS` is read once, lazily) so a
+subprocess inherits its faults from the environment; tests use `install` /
+`clear` for in-process control. `is_oom` classifies both injected and real
+XLA ``RESOURCE_EXHAUSTED`` failures, so the dispatcher's retry machinery
+has exactly one detection path.
+"""
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+ENV_FAULTS = "REPRO_FAULTS"
+
+KINDS = ("oom", "crash", "kill")
+SITES = ("chunk", "spool")
+
+_SPEC_RE = re.compile(r"^(?P<kind>[a-z]+)@(?P<site>[a-z]+)"
+                      r"(?P<index>\d+)(?::(?P<count>\d+))?$")
+
+
+class SimulatedOOM(RuntimeError):
+    """Injected stand-in for an XLA RESOURCE_EXHAUSTED allocation failure
+    (the message carries the marker so `is_oom` needs no isinstance)."""
+
+    def __init__(self, site: str, index: int):
+        super().__init__(
+            f"RESOURCE_EXHAUSTED: injected out-of-memory at {site}{index} "
+            f"({ENV_FAULTS})")
+
+
+class SimulatedCrash(RuntimeError):
+    """Injected process death (the recoverable, exception-shaped kind; the
+    'kill' fault calls os._exit instead and never raises)."""
+
+    def __init__(self, site: str, index: int):
+        super().__init__(f"injected crash at {site}{index} ({ENV_FAULTS})")
+
+
+class ExecError(RuntimeError):
+    """Structured execution failure: which tag/chunk failed, which global
+    lane range it covered, and the underlying cause — raised only after
+    the bounded retry budget is spent (see `planner.RetryPolicy`)."""
+
+    def __init__(self, message: str, *, tag: str = "", chunk: int = -1,
+                 lanes: Optional[Tuple[int, int]] = None,
+                 cause: Optional[BaseException] = None):
+        detail = f"{message} [tag={tag!r} chunk={chunk}"
+        if lanes is not None:
+            detail += f" lanes=[{lanes[0]}, {lanes[1]})"
+        detail += "]"
+        if cause is not None:
+            detail += f": {cause!r:.300}"
+        super().__init__(detail)
+        self.tag = tag
+        self.chunk = chunk
+        self.lanes = lanes
+        self.cause = cause
+
+
+@dataclass
+class FaultSpec:
+    """One armed fault: `kind` fires at (`site`, `index`) `count` times."""
+    kind: str
+    site: str
+    index: int
+    count: int = 1
+
+    def __str__(self) -> str:
+        return f"{self.kind}@{self.site}{self.index}:{self.count}"
+
+
+def parse(spec: str) -> List[FaultSpec]:
+    """Parse a ``REPRO_FAULTS`` string into `FaultSpec`s (order kept)."""
+    out: List[FaultSpec] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        m = _SPEC_RE.match(part)
+        if not m:
+            raise ValueError(
+                f"bad fault spec {part!r} (grammar: kind@site<index>"
+                f"[:count], e.g. oom@chunk2:1 or crash@spool3)")
+        kind, site = m["kind"], m["site"]
+        if kind not in KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} in {part!r} "
+                             f"(one of {KINDS})")
+        if site not in SITES:
+            raise ValueError(f"unknown fault site {site!r} in {part!r} "
+                             f"(one of {SITES})")
+        out.append(FaultSpec(kind=kind, site=site, index=int(m["index"]),
+                             count=int(m["count"] or 1)))
+    return out
+
+
+@dataclass
+class FaultInjector:
+    """The armed fault set; `fire` is the single decision point."""
+    specs: List[FaultSpec] = field(default_factory=list)
+    fired: List[str] = field(default_factory=list)   # provenance for tests
+
+    def fire(self, site: str, index: int) -> None:
+        """Raise (or kill the process) if a matching armed fault remains;
+        decrement its count either way it fires."""
+        for s in self.specs:
+            if s.site == site and s.index == index and s.count > 0:
+                s.count -= 1
+                self.fired.append(f"{s.kind}@{site}{index}")
+                if s.kind == "oom":
+                    raise SimulatedOOM(site, index)
+                if s.kind == "crash":
+                    raise SimulatedCrash(site, index)
+                # 'kill': a hard death — no unwinding, no atexit, exactly
+                # what SIGKILL / a hardware loss looks like to the store
+                os._exit(137)
+        return None
+
+    def armed(self) -> bool:
+        return any(s.count > 0 for s in self.specs)
+
+
+# Process-global injector: lazily built from REPRO_FAULTS so subprocesses
+# inherit their faults from the environment. `install`/`clear` give tests
+# in-process control without touching os.environ.
+_INJECTOR: Optional[FaultInjector] = None
+
+
+def injector() -> FaultInjector:
+    global _INJECTOR
+    if _INJECTOR is None:
+        _INJECTOR = FaultInjector(parse(os.environ.get(ENV_FAULTS, "")))
+    return _INJECTOR
+
+
+def install(spec: str) -> FaultInjector:
+    """Arm an in-process fault set (replacing any prior one)."""
+    global _INJECTOR
+    _INJECTOR = FaultInjector(parse(spec))
+    return _INJECTOR
+
+
+def clear() -> None:
+    """Disarm everything (tests call this in teardown)."""
+    global _INJECTOR
+    _INJECTOR = FaultInjector()
+
+
+def fire(site: str, index: int) -> None:
+    """Fire a named site against the active injector (no-op when clean)."""
+    inj = injector()
+    if inj.specs:
+        inj.fire(site, index)
+
+
+# Real XLA OOMs surface as jaxlib.xla_extension.XlaRuntimeError (or
+# jax.errors.JaxRuntimeError) whose message leads with the grpc-style
+# status name; match on the message so no jaxlib import is needed here.
+_OOM_MARKERS = ("RESOURCE_EXHAUSTED", "Resource exhausted",
+                "out of memory", "Out of memory")
+
+
+def is_oom(err: BaseException) -> bool:
+    """True for injected OOMs and real XLA allocation failures."""
+    if isinstance(err, SimulatedOOM):
+        return True
+    msg = str(err)
+    return any(m in msg for m in _OOM_MARKERS)

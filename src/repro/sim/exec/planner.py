@@ -59,6 +59,30 @@ MEMINFO_PATH = "/proc/meminfo"
 DEFAULT_PIPELINE_DEPTH = 2
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded per-chunk recovery from RESOURCE_EXHAUSTED failures.
+
+    When a chunk's dispatch or landing OOMs, the dispatcher re-runs that
+    chunk's lanes in narrower sub-chunks: each failed attempt halves the
+    width (never below `min_width`, i.e. degrading gracefully to width-1
+    single-lane dispatches) and sleeps ``backoff_s * 2**attempt`` before
+    retrying. `max_retries` bounds the total failed attempts per chunk —
+    the retry state is a (width, attempt, offset) triple, bounded by
+    construction — after which the dispatcher surfaces a structured
+    `faults.ExecError` naming the lanes it could not land. Only the
+    failing chunk pays: sibling chunks keep their planned width, and a
+    fault-free run takes this code path zero times (asserted by
+    scripts/trace_guard.py)."""
+    max_retries: int = 4
+    min_width: int = 1
+    backoff_s: float = 0.0
+
+    def backoff_for(self, attempt: int) -> float:
+        """Exponential backoff delay before retry `attempt` (0-based)."""
+        return self.backoff_s * (2 ** attempt)
+
+
 def host_available_bytes(path: str = MEMINFO_PATH) -> Optional[int]:
     """MemAvailable from a /proc/meminfo-format file, or None."""
     try:
@@ -137,6 +161,10 @@ class ExecPlan:
     # scan (the A/B escape hatch).
     segment: int = DEFAULT_SEGMENT
     early_exit: bool = True
+    # per-chunk OOM recovery budget (see `RetryPolicy`); the dispatcher
+    # consults it only when a chunk actually fails, so it never shapes the
+    # compiled program or the fault-free fast path.
+    retry: RetryPolicy = RetryPolicy()
 
     @property
     def n_devices(self) -> int:
@@ -178,12 +206,14 @@ def plan(dims: TopoDims, cfg, f_max: int, n_ticks: int, n_lanes: int, *,
          budget: Union[int, str, None] = "auto",
          pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
          unroll: int = 1, segment: int = DEFAULT_SEGMENT,
-         early_exit: bool = True) -> ExecPlan:
+         early_exit: bool = True,
+         retry: Optional[RetryPolicy] = None) -> ExecPlan:
     """Derive an `ExecPlan` for an `n_lanes`-wide grid of one program
     signature. `budget` is an explicit total byte cap, "auto" (read device /
     host memory stats), or None (uncapped). `devices` defaults to every
     local device. `segment` / `early_exit` configure the engine's
-    active-horizon runner (see `engine.compiled_runner`)."""
+    active-horizon runner (see `engine.compiled_runner`); `retry` the
+    per-chunk OOM recovery budget (default `RetryPolicy()`)."""
     from .. import engine
     devices = tuple(devices if devices is not None else jax.devices())
     if not devices:
@@ -224,4 +254,5 @@ def plan(dims: TopoDims, cfg, f_max: int, n_ticks: int, n_lanes: int, *,
                     per_lane_bytes=per_lane, budget_bytes=budget_bytes,
                     budget_source=source, pipeline_depth=pipeline_depth,
                     dims=dims, f_max=f_max, n_ticks=n_ticks, unroll=unroll,
-                    segment=segment, early_exit=early_exit)
+                    segment=segment, early_exit=early_exit,
+                    retry=retry if retry is not None else RetryPolicy())

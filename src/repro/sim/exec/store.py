@@ -24,10 +24,28 @@ Two jobs, one object:
   a merge-appended per-scenario ``trajectory`` (an existing file's history
   is preserved and extended), so the committed perf record accumulates
   across PRs (`benchmarks/run.py --scenario all`).
+
+Crash safety & the chunk journal
+--------------------------------
+Every write the store commits — chunk npz (with its ``__trace__`` block),
+``manifest.json``, ``BENCH_sweep.json`` — goes through tmp-file +
+``os.replace``, so a process dying mid-write leaves at most an orphaned
+``*.tmp`` file, never a truncated committed one. Each manifest entry is a
+*journal* record of one landed chunk: tag, run, chunk index, the global
+``lane_lo`` of its first lane, lane count, and the npz's ``sha256``
+content hash. `verify_chunk` re-checks an entry against its file (present,
+hash-intact, readable); anything that fails is `quarantine`d — the file is
+moved to ``<root>/quarantine/`` and the entry marked, so `load_tag` /
+`load_trace` report and skip corrupt chunks instead of raising
+`BadZipFile` mid-reassembly, and `exec.resume` recomputes exactly the
+missing/corrupt chunks (see docs/ARCHITECTURE.md "Fault tolerance &
+resume").
 """
 from __future__ import annotations
 
+import hashlib
 import json
+import os
 import time
 import warnings
 from pathlib import Path
@@ -37,6 +55,7 @@ import numpy as np
 
 from ..engine import SimState
 from ..trace import TraceLayout
+from .faults import ExecError, fire
 
 BENCH_FILENAME = "BENCH_sweep.json"
 _EMITS_KEY = "__emits__"
@@ -47,11 +66,28 @@ _TRACE_KEY = "__trace__"
 TRAJECTORY_CAP = 50
 
 
+def _atomic_write_text(path: Path, text: str) -> None:
+    """Commit `text` to `path` via tmp + os.replace: readers see the old
+    content or the new, never a truncation."""
+    tmp = path.with_name(path.name + f".tmp{os.getpid()}")
+    tmp.write_text(text)
+    os.replace(tmp, path)
+
+
+def _sha256_file(path: Union[str, Path]) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 class RunStore:
     def __init__(self, root: Union[str, Path], run_id: Optional[str] = None):
         self.root = Path(root)
         self.run_id = run_id or time.strftime("%Y%m%d-%H%M%S")
         self.chunk_dir = self.root / "chunks"
+        self.quarantine_dir = self.root / "quarantine"
         self.manifest_path = self.root / "manifest.json"
         self.manifest: List[dict] = []
         self.records: Dict[str, dict] = {}
@@ -66,42 +102,129 @@ class RunStore:
         last = max(prior, default=-1)
         return last + 1 if index == 0 else last
 
+    def _persist_manifest(self) -> None:
+        self.manifest_path.parent.mkdir(parents=True, exist_ok=True)
+        _atomic_write_text(self.manifest_path,
+                           json.dumps(self.manifest, indent=1) + "\n")
+
     def spool_chunk(self, tag: str, index: int, state: SimState,
                     emits: np.ndarray,
                     active_ticks: Optional[np.ndarray] = None,
                     trace: Optional[np.ndarray] = None,
-                    trace_channels: Optional[list] = None) -> Path:
-        """Write one landed chunk to disk and persist the manifest.
+                    trace_channels: Optional[list] = None,
+                    run: Optional[int] = None,
+                    lane_lo: Optional[int] = None) -> Path:
+        """Write one landed chunk to disk and journal it in the manifest.
         Filenames carry a global sequence number and runs of a repeated tag
         (same protocol in different groups/scenarios) are numbered, so
-        nothing ever collides or interleaves. `active_ticks` (per-lane
-        ticks actually simulated before the quiescence early exit) is
-        recorded in the manifest entry — readback provenance, not part of
-        the npz round-trip. A traced run additionally passes the chunk's
-        `trace` block (K, T, C) — stored inside the SAME npz, so `load_tag`
-        readers that predate tracing keep working — plus the JSON channel
-        map `trace_channels` (`TraceLayout.meta()`), recorded in the
-        manifest so replay tools can interpret the columns without the
-        SimConfig that produced them."""
+        nothing ever collides or interleaves. The journal entry records the
+        chunk's identity for resume: global `lane_lo` (first lane of the
+        chunk in its grid), lane count, and the npz's `sha256` content
+        hash. `active_ticks` (per-lane ticks actually simulated before the
+        quiescence early exit) is recorded in the manifest entry —
+        readback provenance, not part of the npz round-trip. A traced run
+        additionally passes the chunk's `trace` block (K, T, C) — stored
+        inside the SAME npz, so `load_tag` readers that predate tracing
+        keep working — plus the JSON channel map `trace_channels`
+        (`TraceLayout.meta()`), recorded in the manifest so replay tools
+        can interpret the columns without the SimConfig that produced
+        them.
+
+        Passing `run` pins the run number instead of `_run_of`'s
+        chunk-0-opens-a-run rule — `exec.resume` uses it to land
+        recomputed chunks *inside* the interrupted run; an existing
+        journal entry for the same (tag, run, chunk) is superseded (its
+        stale file removed). The npz and the manifest both commit via
+        tmp + ``os.replace``, so a crash mid-spool can lose at most the
+        in-flight chunk, never corrupt a committed one."""
         self.chunk_dir.mkdir(parents=True, exist_ok=True)
-        run = self._run_of(tag, index)
+        if run is None:
+            run = self._run_of(tag, index)
         path = (self.chunk_dir /
                 f"{len(self.manifest):04d}_{tag}_r{run}_c{index}.npz")
         extra = ({_TRACE_KEY: np.asarray(trace)} if trace is not None
                  else {})
-        np.savez(path, **{_EMITS_KEY: np.asarray(emits)}, **extra,
-                 **{k: np.asarray(v) for k, v in state._asdict().items()})
+        tmp = path.with_name(path.name + f".tmp{os.getpid()}")
+        with open(tmp, "wb") as f:   # file handle: savez must not append
+            np.savez(f, **{_EMITS_KEY: np.asarray(emits)}, **extra,
+                     **{k: np.asarray(v)
+                        for k, v in state._asdict().items()})
+        # deterministic fault site: a 'crash'/'kill' here dies after the
+        # tmp write but BEFORE the atomic rename — the committed store
+        # must stay consistent (scripts/fault_guard.py proves resume does)
+        fire("spool", index)
+        digest = _sha256_file(tmp)
+        os.replace(tmp, path)
         entry = {
             "tag": tag, "run": run, "chunk": index, "path": str(path),
-            "lanes": int(np.asarray(emits).shape[0])}
+            "lanes": int(np.asarray(emits).shape[0]),
+            "sha256": digest}
+        if lane_lo is not None:
+            entry["lane_lo"] = int(lane_lo)
         if active_ticks is not None:
             entry["active_ticks"] = [int(a) for a in np.asarray(active_ticks)]
         if trace_channels is not None:
             entry["trace_channels"] = trace_channels
+        # a resumed recompute supersedes the stale journal entry (and its
+        # file) rather than leaving a duplicate (tag, run, chunk) record
+        stale = [e for e in self.manifest
+                 if (e["tag"], e["run"], e["chunk"]) == (tag, run, index)]
+        for e in stale:
+            self.manifest.remove(e)
+            if e["path"] != str(path):
+                Path(e["path"]).unlink(missing_ok=True)
         self.manifest.append(entry)
-        self.manifest_path.write_text(json.dumps(self.manifest, indent=1)
-                                      + "\n")
+        self._persist_manifest()
         return path
+
+    # ---- verification & quarantine ------------------------------------------
+    def verify_chunk(self, entry: dict) -> Optional[str]:
+        """Why this journal entry cannot be trusted, or None when it can:
+        already quarantined, file missing, content-hash mismatch (a
+        truncated or bit-rotted npz), or unreadable as an npz (legacy
+        entries without a hash fall back to a full read)."""
+        if entry.get("quarantined"):
+            return f"quarantined: {entry['quarantined']}"
+        path = Path(entry["path"])
+        if not path.exists():
+            return "chunk file missing"
+        want = entry.get("sha256")
+        if want is not None:
+            got = _sha256_file(path)
+            if got != want:
+                return (f"content hash mismatch (journal {want[:12]}…, "
+                        f"file {got[:12]}…— truncated or corrupt write)")
+            return None
+        try:  # pre-hash journal entry: readability is the best check left
+            with np.load(path) as z:
+                z[_EMITS_KEY]
+        except Exception as err:
+            return f"unreadable npz: {err!r}"
+        return None
+
+    def quarantine(self, entry: dict, reason: str) -> None:
+        """Mark a journal entry untrusted and move its file (if any) to
+        ``<root>/quarantine/`` — kept for forensics, never reassembled.
+        The manifest is re-persisted so a later resume sees the chunk as
+        missing and recomputes it."""
+        path = Path(entry["path"])
+        if path.exists():
+            self.quarantine_dir.mkdir(parents=True, exist_ok=True)
+            dest = self.quarantine_dir / path.name
+            os.replace(path, dest)
+            entry["path"] = str(dest)
+        entry["quarantined"] = reason
+        self._persist_manifest()
+        warnings.warn(
+            f"quarantined chunk {entry['chunk']} of {entry['tag']!r} run "
+            f"{entry['run']}: {reason} (resume recomputes it)",
+            stacklevel=2)
+
+    def find_chunk(self, tag: str, run: int, chunk: int) -> Optional[dict]:
+        """The latest journal entry for (tag, run, chunk), or None."""
+        hits = [e for e in self.manifest
+                if (e["tag"], e["run"], e["chunk"]) == (tag, run, chunk)]
+        return hits[-1] if hits else None
 
     @staticmethod
     def load_chunk(path: Union[str, Path]) -> Tuple[SimState, np.ndarray]:
@@ -109,46 +232,85 @@ class RunStore:
             return (SimState(**{k: z[k] for k in SimState._fields}),
                     z[_EMITS_KEY])
 
+    @staticmethod
+    def load_chunk_full(path: Union[str, Path]
+                        ) -> Tuple[SimState, np.ndarray,
+                                   Optional[np.ndarray]]:
+        """Like `load_chunk` plus the chunk's spooled trace block (None
+        when the run was spooled with tracing off)."""
+        with np.load(path) as z:
+            trace = z[_TRACE_KEY] if _TRACE_KEY in z.files else None
+            return (SimState(**{k: z[k] for k in SimState._fields}),
+                    z[_EMITS_KEY], trace)
+
     def runs_of(self, tag: str) -> List[int]:
         return sorted({e["run"] for e in self.manifest if e["tag"] == tag})
+
+    def _run_entries(self, tag: str, run: Optional[int],
+                     verified: bool = True) -> List[dict]:
+        """Journal entries of ONE run of a tag, in chunk order — one entry
+        per chunk (a duplicated (run, chunk) journal record keeps only the
+        latest append, with a warning), quarantine-verified when
+        `verified` (corrupt/missing chunks are quarantined on the spot and
+        dropped from the result, with a warning naming them — the caller
+        reassembles what exists instead of crashing mid-`np.load`)."""
+        runs = self.runs_of(tag)
+        if not runs:
+            raise KeyError(f"no spooled chunks tagged {tag!r}")
+        run = runs[-1] if run is None else run
+        by_chunk: Dict[int, dict] = {}
+        dups = []
+        for e in self.manifest:
+            if e["tag"] == tag and e["run"] == run:
+                if e["chunk"] in by_chunk:
+                    dups.append(e["chunk"])
+                by_chunk[e["chunk"]] = e        # latest append wins
+        if not by_chunk:
+            raise KeyError(f"tag {tag!r} has runs {runs}, not {run}")
+        if dups:
+            warnings.warn(
+                f"tag {tag!r} run {run} journals duplicate chunk entries "
+                f"{sorted(set(dups))}; keeping the latest of each",
+                stacklevel=3)
+        entries = [by_chunk[c] for c in sorted(by_chunk)]
+        if not verified:
+            return entries
+        good = []
+        for e in entries:
+            reason = self.verify_chunk(e)
+            if reason is None:
+                good.append(e)
+            elif not e.get("quarantined"):
+                self.quarantine(e, reason)
+        if not good:
+            raise ExecError(
+                f"every chunk of tag {tag!r} run {run} is missing or "
+                "quarantined — nothing to reassemble; re-run (or resume) "
+                "to recompute", tag=tag)
+        return good
 
     def load_tag(self, tag: str,
                  run: Optional[int] = None) -> Tuple[SimState, np.ndarray]:
         """Reassemble ONE spooled run of a tag (default: the latest), in
         chunk order, into the merged (SimState, emits) `execute` returned.
-        Runs never interleave; pick an earlier one via `run` / `runs_of`."""
-        runs = self.runs_of(tag)
-        if not runs:
-            raise KeyError(f"no spooled chunks tagged {tag!r}")
-        run = runs[-1] if run is None else run
-        entries = sorted((e for e in self.manifest
-                          if e["tag"] == tag and e["run"] == run),
-                         key=lambda e: e["chunk"])
-        if not entries:
-            raise KeyError(f"tag {tag!r} has runs {runs}, not {run}")
-        parts = [self.load_chunk(e["path"]) for e in entries]
+        Runs never interleave; pick an earlier one via `run` / `runs_of`.
+        Truncated, hash-mismatched, or missing chunks are quarantined and
+        skipped with a warning (their lanes are absent from the result)
+        rather than raising mid-reassembly; an `ExecError` is raised only
+        when no chunk of the run survives."""
+        parts = [self.load_chunk(e["path"])
+                 for e in self._run_entries(tag, run)]
         merged = SimState(**{
             name: np.concatenate([np.asarray(getattr(st, name))
                                   for st, _ in parts])
             for name in SimState._fields})
         return merged, np.concatenate([em for _, em in parts])
 
-    def _run_entries(self, tag: str, run: Optional[int]) -> List[dict]:
-        runs = self.runs_of(tag)
-        if not runs:
-            raise KeyError(f"no spooled chunks tagged {tag!r}")
-        run = runs[-1] if run is None else run
-        entries = sorted((e for e in self.manifest
-                          if e["tag"] == tag and e["run"] == run),
-                         key=lambda e: e["chunk"])
-        if not entries:
-            raise KeyError(f"tag {tag!r} has runs {runs}, not {run}")
-        return entries
-
     def load_trace(self, tag: str, run: Optional[int] = None
                    ) -> Tuple[np.ndarray, TraceLayout, int,
                               Optional[np.ndarray]]:
-        """Reassemble ONE spooled run's trace block (same run selection as
+        """Reassemble ONE spooled run's trace block (same run selection —
+        and the same quarantine-and-skip corruption handling — as
         `load_tag`). Returns ``(trace[K, T, C], layout, run_no,
         active_ticks[K] or None)``; raises KeyError when that run was
         spooled with tracing off."""
@@ -218,7 +380,10 @@ class RunStore:
         reruns (one scenario re-benchmarked) never drop the rest. Each
         scenario's trajectory is capped at the most recent
         `TRAJECTORY_CAP` entries so the committed file stops growing
-        without bound."""
+        without bound. The merge-append commits atomically (tmp +
+        ``os.replace``): a crash mid-write can no longer truncate the
+        committed trajectory file it would otherwise only warn about on
+        the next run."""
         path = Path(path) if path is not None else self.root / BENCH_FILENAME
         created = time.strftime("%Y-%m-%dT%H:%M:%S")
         trajectory: Dict[str, List[dict]] = {}
@@ -249,6 +414,6 @@ class RunStore:
             "trajectory": trajectory,
         }
         path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(payload, indent=2, sort_keys=False)
-                        + "\n")
+        _atomic_write_text(path, json.dumps(payload, indent=2,
+                                            sort_keys=False) + "\n")
         return path

@@ -217,7 +217,7 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
         n_flows: Optional[int] = None, drain: Optional[int] = None,
         unroll: int = 1, max_batch_bytes: Optional[int] = None,
         devices: Optional[Sequence] = None, auto_budget: bool = True,
-        store=None, early_exit: bool = True,
+        store=None, early_exit: bool = True, resume: bool = False,
         long_lived_pkts: Optional[int] = None, trace=None):
     """Run one registry scenario through the batched sweep subsystem.
 
@@ -225,7 +225,9 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
     axis (scenarios WITH one pin their fabrics absolutely). Execution
     placement — chunk width, multi-device sharding, chunk spooling — is
     planned per protocol group by `sim.exec` (`devices`, `auto_budget`,
-    `max_batch_bytes`, `store` pass through to its planner/dispatcher).
+    `max_batch_bytes`, `store` pass through to its planner/dispatcher;
+    `resume=True` with a store reuses the chunks an interrupted run of
+    the same scenario already spooled — see `exec.resume`).
     `early_exit=False` forces the flat scan (A/B timing baseline);
     `long_lived_pkts` overrides the long-lived flow size (smoke-scale runs
     of `table1_long_lived` use it so the probe flow can complete and the
@@ -250,7 +252,8 @@ def run(name_or_scenario, clos: Optional[ClosParams] = None,
                                     else sc.drain_ticks),
                              unroll=unroll, max_batch_bytes=max_batch_bytes,
                              devices=devices, auto_budget=auto_budget,
-                             store=store, early_exit=early_exit)
+                             store=store, early_exit=early_exit,
+                             resume=resume)
     if any(r.proto == metrics.ORACLE_PROTO for r in results):
         metrics.distance_from_optimal(results)
     return results

@@ -259,7 +259,7 @@ def run_batch(topo: Union[Topology, Sequence[Topology]],
               max_batch_bytes: Optional[int] = None,
               devices: Optional[Sequence] = None, auto_budget: bool = True,
               plan: Optional["object"] = None, store=None,
-              early_exit: bool = True):
+              early_exit: bool = True, resume: bool = False):
     """Run K workloads under one protocol config as a single vmapped,
     jitted program. `topo` is one Topology shared by every lane or a
     per-lane sequence (mixed fabrics are padded to a common `TopoDims`, so
@@ -273,7 +273,10 @@ def run_batch(topo: Union[Topology, Sequence[Topology]],
     the cap). Oversized grids run as equal-width chunks of one shared
     executable, each chunk sharded across `devices` (default: all local
     devices) and double-buffered against host readback; a `store`
-    (`exec.RunStore`) spools chunks to disk as they land. `early_exit`
+    (`exec.RunStore`) spools chunks to disk as they land, and
+    `resume=True` (requires a store) reuses the chunks an interrupted run
+    of this protocol already journaled, recomputing only the rest (see
+    `exec.resume`). `early_exit`
     False forces the flat (non-segmented) runner for A/B timing — per-lane
     active tick counts land in `exec.last_active_ticks()`."""
     from . import exec as exec_
@@ -290,7 +293,7 @@ def run_batch(topo: Union[Topology, Sequence[Topology]],
                           budget=budget, unroll=unroll,
                           early_exit=early_exit)
     return exec_.execute(plan, topos, flowsets, cfg, store=store,
-                         tag=cfg.proto.name)
+                         tag=cfg.proto.name, resume=resume)
 
 
 @dataclass
@@ -321,7 +324,8 @@ def run_grid(topo: Topology,
              summarize: bool = True,
              max_batch_bytes: Optional[int] = None,
              devices: Optional[Sequence] = None, auto_budget: bool = True,
-             store=None, early_exit: bool = True) -> List[CaseResult]:
+             store=None, early_exit: bool = True,
+             resume: bool = False) -> List[CaseResult]:
     """Run an arbitrary (label, SimConfig, FlowSet) grid.
 
     Each case runs on the fabric named by its own ``cfg.clos`` (``topo`` is
@@ -333,7 +337,9 @@ def run_grid(topo: Topology,
     construction). All groups share `n_ticks` (default: max horizon +
     drain) so same-shaped protocol groups can still share executables
     across calls. `devices` / `auto_budget` / `max_batch_bytes` / `store`
-    configure each group's `exec.ExecPlan` (see `run_batch`)."""
+    / `resume` configure each group's `exec.ExecPlan` (see `run_batch`;
+    with `resume=True` each protocol group independently reuses whatever
+    chunks its interrupted run spooled)."""
     if n_ticks is None:
         n_ticks = int(max(f.horizon for _, _, f in cases) + drain)
     # group key: the compile signature — the protocol/timing config alone.
@@ -353,7 +359,8 @@ def run_grid(topo: Topology,
         st, emits = run_batch(group_topos, flowsets, cfg, n_ticks, unroll,
                               pad_multiple, max_batch_bytes=max_batch_bytes,
                               devices=devices, auto_budget=auto_budget,
-                              store=store, early_exit=early_exit)
+                              store=store, early_exit=early_exit,
+                              resume=resume)
         for k, i in enumerate(idxs):
             label, case_cfg, flows = cases[i]
             case_topo = group_topos[k]

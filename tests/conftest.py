@@ -3,8 +3,11 @@ import sys
 
 # Tests must see the real single CPU device (the 512-device override is only
 # ever set inside launch/dryrun.py). Keep jax quiet and deterministic. An
-# ambient exec budget would change auto-planned chunking under the tests.
+# ambient exec budget would change auto-planned chunking under the tests;
+# ambient injected faults would fail runs that expect the fault-free path
+# (tests arm their own via faults.install / monkeypatch).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ.pop("REPRO_EXEC_MAX_BYTES", None)
+os.environ.pop("REPRO_FAULTS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

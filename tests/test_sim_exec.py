@@ -347,3 +347,279 @@ def test_run_grid_mixed_protocols_through_planner(topo, cfg):
     for (label, _, flows), r in zip(cases, results):
         assert r.state.done.shape[0] == flows.n_flows, label
         assert r.emits.shape[1] == 3, label
+
+
+# ---- fault injection, OOM retry, crash-safe store, resume -------------------
+# (the end-to-end OOM+crash+resume scenario also gates CI via
+# scripts/fault_guard.py; these tests cover each path in isolation)
+import dataclasses
+import os as _os
+import subprocess
+import sys as _sys
+from pathlib import Path
+
+from repro.sim.exec import dispatch, faults
+
+
+@pytest.fixture
+def clean_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _chunked_plan(cfg, n_lanes, chunk_width, n_ticks=512):
+    """A single-device plan with a pinned chunk width (the fault sites
+    are chunk indices, so tests need a known chunking)."""
+    base = _plan(cfg, n_lanes=n_lanes, n_ticks=n_ticks, budget=None,
+                 devices=jax.devices()[:1])
+    return dataclasses.replace(base, chunk_width=chunk_width)
+
+
+def test_fault_spec_parse_valid_and_invalid():
+    specs = faults.parse(" oom@chunk2:1, crash@spool3 ,kill@spool0:2 ")
+    assert [(s.kind, s.site, s.index, s.count) for s in specs] == \
+        [("oom", "chunk", 2, 1), ("crash", "spool", 3, 1),
+         ("kill", "spool", 0, 2)]
+    assert faults.parse("") == []
+    for bad in ("oom@chunk", "oom#chunk2", "frob@chunk2", "oom@disk2",
+                "oom@chunk2:x"):
+        with pytest.raises(ValueError):
+            faults.parse(bad)
+
+
+def test_injector_counts_decrement(clean_faults):
+    inj = faults.install("oom@chunk1:2")
+    with pytest.raises(faults.SimulatedOOM):
+        inj.fire("chunk", 1)
+    inj.fire("chunk", 0)                       # wrong index: no-op
+    inj.fire("spool", 1)                       # wrong site: no-op
+    with pytest.raises(faults.SimulatedOOM):
+        inj.fire("chunk", 1)
+    inj.fire("chunk", 1)                       # count spent: disarmed
+    assert not inj.armed()
+    assert inj.fired == ["oom@chunk1", "oom@chunk1"]
+
+
+def test_is_oom_classifies_injected_and_real_messages():
+    assert faults.is_oom(faults.SimulatedOOM("chunk", 0))
+    assert faults.is_oom(RuntimeError("RESOURCE_EXHAUSTED: ..."))
+    assert faults.is_oom(RuntimeError("Allocator ran out of memory"))
+    assert not faults.is_oom(RuntimeError("shape mismatch"))
+
+
+def test_oom_retry_bisects_and_matches_clean_run(topo, cfg, clean_faults):
+    flowsets = [_flows(topo, s) for s in range(4)]
+    plan = _chunked_plan(cfg, 4, 2)
+    st_ref, em_ref = exec_.execute(plan, [topo] * 4, flowsets, cfg,
+                                   tag="clean")
+    mark = dispatch.RETRY_LOG.mark()
+    faults.install("oom@chunk1:1")
+    st, em = exec_.execute(plan, [topo] * 4, flowsets, cfg, tag="retried")
+    assert np.array_equal(em, em_ref)
+    _states_equal(st, st_ref, "OOM-retried run")
+    events = dispatch.RETRY_LOG.since(mark)
+    assert events and events[0]["chunk"] == 1 \
+        and events[0]["retry_width"] == 1
+    assert exec_.last_timing()["retries"] == 1
+
+
+def test_retry_budget_exhaustion_raises_exec_error(topo, cfg,
+                                                   clean_faults):
+    flowsets = [_flows(topo, s) for s in range(4)]
+    plan = _chunked_plan(cfg, 4, 2)
+    faults.install("oom@chunk0:99")            # never stops OOMing
+    with pytest.raises(exec_.ExecError) as ei:
+        exec_.execute(plan, [topo] * 4, flowsets, cfg, tag="doomed")
+    assert ei.value.chunk == 0 and ei.value.lanes == (0, 2)
+    assert "lanes=[0, 2)" in str(ei.value)
+    assert isinstance(ei.value.cause, faults.SimulatedOOM)
+
+
+def test_crash_mid_spool_then_resume_bit_identical(topo, cfg, tmp_path,
+                                                   clean_faults):
+    """A crash after chunk 1's tmp write but before its atomic rename
+    loses only the in-flight chunk; resume reuses the journaled chunk 0
+    and recomputes the rest, matching an uninterrupted run exactly."""
+    flowsets = [_flows(topo, s) for s in range(6)]
+    plan = _chunked_plan(cfg, 6, 2)
+    st_ref, em_ref = exec_.execute(plan, [topo] * 6, flowsets, cfg,
+                                   tag="ref")
+    store = exec_.RunStore(tmp_path)
+    faults.install("crash@spool1")
+    with pytest.raises(faults.SimulatedCrash):
+        exec_.execute(plan, [topo] * 6, flowsets, cfg, store=store,
+                      tag="bfc")
+    faults.clear()
+    assert [e["chunk"] for e in store.manifest if e["tag"] == "bfc"] == [0]
+    assert any(".tmp" in p.name for p in store.chunk_dir.iterdir())
+
+    store2 = exec_.RunStore(tmp_path)          # reattach, fresh process
+    st, em = exec_.resume(plan, [topo] * 6, flowsets, cfg, store2,
+                          tag="bfc")
+    assert np.array_equal(em, em_ref)
+    _states_equal(st, st_ref, "resumed run")
+    t = exec_.last_timing()
+    assert t["chunks_reused"] == 1 and t["retries"] == 0
+    _, em_disk = store2.load_tag("bfc")
+    assert np.array_equal(em_disk, em_ref)
+
+
+def test_resume_is_noop_when_run_complete(topo, cfg, tmp_path):
+    flowsets = [_flows(topo, s) for s in range(4)]
+    plan = _chunked_plan(cfg, 4, 2)
+    store = exec_.RunStore(tmp_path)
+    st_ref, em_ref = exec_.execute(plan, [topo] * 4, flowsets, cfg,
+                                   store=store, tag="bfc")
+    before = engine.trace_count()
+    st, em = exec_.resume(plan, [topo] * 4, flowsets, cfg, store,
+                          tag="bfc")
+    assert engine.trace_count() == before      # pure reload, no dispatch
+    assert exec_.last_timing()["chunks_reused"] == plan.n_chunks
+    assert np.array_equal(em, em_ref)
+    _states_equal(st, st_ref, "no-op resume")
+
+
+def test_resume_without_prior_run_degrades_to_execute(topo, cfg,
+                                                      tmp_path):
+    flowsets = [_flows(topo, s) for s in range(2)]
+    plan = _chunked_plan(cfg, 2, 2)
+    store = exec_.RunStore(tmp_path)
+    st, em = exec_.resume(plan, [topo] * 2, flowsets, cfg, store,
+                          tag="fresh")
+    assert exec_.last_timing()["chunks_reused"] == 0
+    assert store.runs_of("fresh") == [0]
+    with pytest.raises(ValueError, match="store"):
+        exec_.execute(plan, [topo] * 2, flowsets, cfg, resume=True)
+
+
+def test_store_quarantines_truncated_chunk(topo, cfg, tmp_path):
+    """A truncated npz (hash mismatch) is quarantined and skipped with a
+    warning; load_tag reassembles the surviving lanes instead of raising
+    mid-np.load."""
+    flowsets = [_flows(topo, s) for s in range(4)]
+    plan = _chunked_plan(cfg, 4, 2)
+    store = exec_.RunStore(tmp_path)
+    exec_.execute(plan, [topo] * 4, flowsets, cfg, store=store, tag="bfc")
+    victim = store.manifest[0]
+    data = open(victim["path"], "rb").read()
+    with open(victim["path"], "wb") as f:      # truncate to half
+        f.write(data[:len(data) // 2])
+    with pytest.warns(UserWarning, match="quarantined chunk 0"):
+        _, em = store.load_tag("bfc")
+    assert em.shape[0] == 2                    # only chunk 1's lanes
+    assert victim["quarantined"]
+    assert (store.quarantine_dir / Path(victim["path"]).name).exists()
+    # the quarantine persisted: a reattached store skips it silently
+    # (already marked) and a resume would recompute it
+    again = exec_.RunStore(tmp_path)
+    assert again.manifest[0]["quarantined"]
+
+
+def test_store_quarantines_missing_chunk_and_reports_empty_run(
+        topo, cfg, tmp_path):
+    flowsets = [_flows(topo, s) for s in range(4)]
+    plan = _chunked_plan(cfg, 4, 2)
+    store = exec_.RunStore(tmp_path)
+    exec_.execute(plan, [topo] * 4, flowsets, cfg, store=store, tag="bfc")
+    Path(store.manifest[0]["path"]).unlink()
+    with pytest.warns(UserWarning, match="missing"):
+        _, em = store.load_tag("bfc")
+    assert em.shape[0] == 2
+    Path(store.manifest[1]["path"]).unlink()   # now nothing survives
+    with pytest.warns(UserWarning):
+        with pytest.raises(exec_.ExecError, match="missing or quarant"):
+            store.load_tag("bfc")
+
+
+def test_store_duplicate_journal_entries_keep_latest(topo, cfg, tmp_path):
+    flowsets = [_flows(topo, s) for s in range(2)]
+    plan = _chunked_plan(cfg, 2, 2)
+    store = exec_.RunStore(tmp_path)
+    _, em_ref = exec_.execute(plan, [topo] * 2, flowsets, cfg,
+                              store=store, tag="bfc")
+    store.manifest.append(dict(store.manifest[0]))   # duplicate record
+    store._persist_manifest()
+    reattached = exec_.RunStore(tmp_path)
+    with pytest.warns(UserWarning, match="duplicate"):
+        _, em = reattached.load_tag("bfc")
+    assert np.array_equal(em, em_ref)
+
+
+def test_write_bench_atomic_under_failed_replace(tmp_path, monkeypatch):
+    """A crash (or failure) at the commit point must leave the existing
+    BENCH file untouched — never truncated."""
+    store = exec_.RunStore(tmp_path, run_id="a")
+    store.record_scenario("s", wall_s=1.0, grid_points=4,
+                          xla_compilations=1, device_count=1)
+    path = store.write_bench(tmp_path / "BENCH_sweep.json")
+    before = path.read_text()
+
+    from repro.sim.exec import store as store_mod
+
+    def boom(src, dst):
+        raise OSError("disk pulled at the worst moment")
+    monkeypatch.setattr(store_mod.os, "replace", boom)
+    b = exec_.RunStore(tmp_path, run_id="b")
+    b.record_scenario("s", wall_s=0.5, grid_points=4,
+                      xla_compilations=1, device_count=1)
+    with pytest.raises(OSError):
+        b.write_bench(path)
+    monkeypatch.undo()
+    assert path.read_text() == before          # old content, still valid
+    assert json.loads(before)["run_id"] == "a"
+
+
+def test_plan_carries_retry_policy(cfg):
+    p = _plan(cfg, budget=None)
+    assert p.retry == exec_.RetryPolicy()
+    pol = exec_.RetryPolicy(max_retries=2, min_width=1, backoff_s=0.5)
+    assert _plan(cfg, budget=None, retry=pol).retry is pol
+    assert pol.backoff_for(0) == 0.5 and pol.backoff_for(2) == 2.0
+
+
+@pytest.mark.slow
+def test_kill_mid_spool_subprocess_then_resume(topo, cfg, tmp_path):
+    """The hard-death variant: a child process dies via os._exit(137) —
+    no unwinding, no atexit — while spooling chunk 1; the parent
+    reattaches the store and resumes to a bit-identical result."""
+    flowsets = [_flows(topo, s) for s in range(4)]
+    plan = _chunked_plan(cfg, 4, 2)
+    st_ref, em_ref = exec_.execute(plan, [topo] * 4, flowsets, cfg,
+                                   tag="ref")
+    child = f"""
+import dataclasses, jax
+from repro.sim import topology, workload
+from repro.sim import exec as exec_
+from repro.sim.config import BFC, SimConfig
+from repro.sim.topology import ClosParams, TopoDims
+CLOS = ClosParams(n_servers=8, n_tor=2, n_spine=2, switch_buffer_pkts=512)
+topo = topology.build(CLOS)
+cfg = SimConfig(proto=BFC, clos=CLOS)
+fs = [workload.generate(topo, workload.WorkloadParams(
+    workload="uniform", load=0.5, seed=s), 24) for s in range(4)]
+base = exec_.plan(TopoDims.of(topo), cfg, 64, 512, 4, budget=None,
+                  devices=jax.devices()[:1])
+plan = dataclasses.replace(base, chunk_width=2)
+store = exec_.RunStore({str(tmp_path)!r})
+exec_.execute(plan, [topo] * 4, fs, cfg, store=store, tag="bfc")
+raise SystemExit("unreachable: the kill fault should have fired")
+"""
+    env = dict(_os.environ, REPRO_FAULTS="kill@spool1",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=_os.pathsep.join(
+                   [_os.path.join(_os.path.dirname(__file__), "..", "src")]
+                   + ([_os.environ["PYTHONPATH"]]
+                      if _os.environ.get("PYTHONPATH") else [])))
+    env.pop("XLA_FLAGS", None)                 # child: plain single device
+    proc = subprocess.run([_sys.executable, "-c", child],
+                          capture_output=True, text=True, env=env)
+    assert proc.returncode == 137, proc.stderr
+
+    store = exec_.RunStore(tmp_path)           # parent reattaches
+    assert [e["chunk"] for e in store.manifest if e["tag"] == "bfc"] == [0]
+    st, em = exec_.resume(plan, [topo] * 4, flowsets, cfg, store,
+                          tag="bfc")
+    assert np.array_equal(em, em_ref)
+    _states_equal(st, st_ref, "resumed after kill")
+    assert exec_.last_timing()["chunks_reused"] == 1
